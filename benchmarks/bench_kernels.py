@@ -1,0 +1,54 @@
+"""Appendix B kernels: path-count matmul, GF(p) matmul, flash attention.
+
+On this CPU container the Pallas kernels run in interpret mode (correctness
+only); the timed number is the jitted XLA reference path — the substrate's
+actual CPU throughput — plus an allclose check against the kernel.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gfmm import gf_matmul
+from repro.kernels.pathcount import pathcount_matmul
+
+from .common import emit, timeit
+
+
+def main(quick: bool = False) -> None:
+    n = 256 if quick else 512
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.random((n, n), dtype=np.float32))
+
+    fn = jax.jit(lambda x, y: ref.pathcount_ref(x, y))
+    us = timeit(lambda: jax.block_until_ready(fn(a, a)), n=3)
+    small = a[:128, :128]
+    ok = np.allclose(pathcount_matmul(small, small, interpret=True),
+                     ref.pathcount_ref(small, small), rtol=1e-5)
+    emit(f"kernels/pathcount/{n}x{n}", us,
+         f"gflops={2 * n ** 3 / us / 1e3:.1f} allclose={ok}")
+
+    ai = jnp.asarray(rng.integers(0, 1009, (n, n)), dtype=jnp.int32)
+    fg = jax.jit(lambda x, y: ref.gf_matmul_ref(x, y, 1009))
+    us = timeit(lambda: jax.block_until_ready(fg(ai, ai)), n=3)
+    sm = ai[:128, :128]
+    ok = np.array_equal(np.asarray(gf_matmul(sm, sm, interpret=True)),
+                        np.asarray(ref.gf_matmul_ref(sm, sm, 1009)))
+    emit(f"kernels/gfmm/{n}x{n}", us, f"allclose={ok}")
+
+    s = 512 if quick else 1024
+    q = jnp.asarray(rng.standard_normal((1, 8, s, 64), dtype=np.float32))
+    fa = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))
+    us = timeit(lambda: jax.block_until_ready(fa(q, q, q)), n=3)
+    qs = q[:, :2, :128]
+    ok = np.allclose(flash_attention(qs, qs, qs, causal=True, interpret=True),
+                     ref.attention_ref(qs, qs, qs, causal=True), atol=2e-3)
+    emit(f"kernels/flash_attention/s{s}", us, f"allclose={ok}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Paper Fig 12 / Fig 16: layer-count (n) and sparsity (rho) sweep.
+
+Claims reproduced:
+  * more layers -> more realised edge-disjoint paths per pair (Fig 12);
+    nine layers resolve most collisions on SF;
+  * when many layers are available, denser layers (higher rho) are better
+    (more alternatives per layer + shorter paths);
+  * FCT improves with (n, rho) up to saturation (flow simulator).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import layers as L
+from repro.core import traffic as TR
+from repro.core import transport as TP
+from repro.core.topology import slim_fly
+
+from .common import emit, timeit
+
+
+def mean_disjoint(lr, n_samples: int = 40, seed: int = 1) -> float:
+    rng = np.random.default_rng(seed)
+    vals = []
+    for _ in range(n_samples):
+        s, t = rng.choice(lr.topo.n_routers, 2, replace=False)
+        vals.append(L.layer_disjoint_paths(lr, s, t))
+    return float(np.mean(vals))
+
+
+def main(quick: bool = False) -> None:
+    topo = slim_fly(7 if quick else 11)   # k'=11 / 17
+    for n in (3, 5, 9):
+        for rho in (0.4, 0.6, 0.8):
+            us = timeit(lambda: L.build_layers(topo, n, rho, seed=0), n=1)
+            lr = L.build_layers(topo, n, rho, seed=0)
+            emit(f"fig12/disjoint/sf{topo.n_routers}/n{n}/rho{rho}", us,
+                 f"mean_disjoint={mean_disjoint(lr):.2f}")
+
+    # FCT sweep on the small instance (flow simulator)
+    topo5 = slim_fly(5)
+    wl = TR.make_workload(topo5, "adversarial", seed=3, randomize=False,
+                          n_rounds=2, flow_size=1 << 20)
+    for n, rho in ((3, 0.4), (5, 0.6), (9, 0.6), (9, 0.8)):
+        lr = L.build_layers(topo5, n, rho, seed=0)
+        res = TP.simulate(topo5, lr, wl,
+                          TP.SimConfig(n_steps=400 if quick else 1500))
+        st = res.fct_stats()
+        emit(f"fig12/fct/n{n}/rho{rho}", st["p50"] * 1e6,
+             f"p99us={st['p99'] * 1e6:.0f} fin={st['finished']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

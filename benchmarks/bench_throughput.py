@@ -1,0 +1,37 @@
+"""Paper Fig 9: maximum achievable throughput (MCF LP) per layered scheme.
+
+Claims reproduced:
+  * SPAIN (tree layers) wins on fat trees, loses on low-diameter networks;
+  * the PI-minimising variant >= the simple random variant;
+  * layered (multi-path) >= single-path on every topology.
+"""
+
+from __future__ import annotations
+
+from repro.core import layers as L
+from repro.core import throughput as TH
+from repro.core import topology as T
+from repro.core import traffic as TR
+
+from .common import emit, timeit
+
+
+def main(quick: bool = False) -> None:
+    topos = [T.slim_fly(5), T.xpander(8), T.fat_tree(8)]
+    schemes = ["rand", "pi_min", "spain", "ksp"] if not quick \
+        else ["rand", "spain"]
+    for topo in topos:
+        wl = TR.make_workload(topo, "permutation", seed=0,
+                              frac_endpoints=0.55)   # paper: intensity 0.55
+        for scheme in schemes:
+            n = 5 if scheme != "spain" else 8
+            lr = L.build_layers(topo, n, 0.6, scheme=scheme, seed=0)
+            us = timeit(lambda: TH.mat_lp(lr, wl), n=1)
+            res = TH.mat_lp(lr, wl)
+            single = TH.mat_single_layer(lr, wl)
+            emit(f"fig9/mat/{topo.name}/{scheme}", us,
+                 f"T={res.throughput:.3f} T_single={single.throughput:.3f}")
+
+
+if __name__ == "__main__":
+    main()

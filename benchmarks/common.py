@@ -1,0 +1,37 @@
+"""Shared benchmark plumbing: timing + CSV emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable, List, Tuple
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timeit(fn: Callable, n: int = 3, warmup: int = 1) -> float:
+    """Median wall time in microseconds."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def small_topologies(include_jf: bool = True):
+    """The paper's topology set at 'small' scale (§2.2.2), cost-matched."""
+    from repro.core import topology as T
+
+    topos = [T.slim_fly(5), T.dragonfly(3), T.xpander(8), T.hyperx(2, 6),
+             T.fat_tree(8)]
+    if include_jf:
+        topos.append(T.equivalent_jellyfish(topos[0], seed=0))
+    return topos

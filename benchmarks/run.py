@@ -1,0 +1,47 @@
+"""Benchmark aggregator: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Emits ``name,us_per_call,derived`` CSV lines per benchmark.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = ["bench_diversity", "bench_collisions", "bench_layers",
+           "bench_transport", "bench_throughput", "bench_kernels",
+           "bench_fabric"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = []
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        t0 = time.time()
+        print(f"# === {mod_name} ===", flush=True)
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["main"])
+            mod.main(quick=args.quick)
+        except Exception as e:
+            failures.append((mod_name, repr(e)))
+            traceback.print_exc()
+        print(f"# {mod_name} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        for f in failures:
+            print("FAILED:", f, file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""FatPaths quickstart: topology -> layers -> flowlet routing -> FCT.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import layers, topology, traffic, transport
+from repro.core.diversity import diversity_report
+
+
+def main():
+    # 1. a Slim Fly (the paper's flagship D=2 topology)
+    topo = topology.slim_fly(q=5)
+    print(f"topology: {topo.name}  routers={topo.n_routers} "
+          f"endpoints={topo.n_endpoints} k'={topo.network_radix}")
+
+    # 2. how scarce are shortest paths? (paper Fig 6 / Table 4)
+    rep = diversity_report(topo, n_cdp=40, n_pi=10)
+    print(f"pairs with a single minimal path: {rep.frac_single_minimal:.0%}"
+          f"  (CDP at d'={rep.d_prime}: {rep.cdp_mean_frac:.0%} of k')")
+
+    # 3. FatPaths layered routing: 1 minimal + 8 sparse non-minimal layers
+    lr = layers.build_layers(topo, n_layers=9, rho=0.6, seed=0)
+    lr.validate_loop_free(n_samples=100)
+    print(f"layers: {lr.n_layers} (rho={lr.rho}), loop-free OK")
+
+    # 4. simulate an adversarial workload under FatPaths vs minimal ECMP
+    wl = traffic.make_workload(topo, "adversarial", seed=3, randomize=False,
+                               n_rounds=2)
+    for name, routing, bal in (
+            ("FatPaths", lr, "fatpaths"),
+            ("ECMP", transport.ecmp_routing(topo), "ecmp")):
+        res = transport.simulate(topo, routing, wl,
+                                 transport.SimConfig(balancing=bal,
+                                                     n_steps=1200))
+        st = res.fct_stats()
+        print(f"{name:9s} p50 FCT {st['p50'] * 1e6:7.0f} us   "
+              f"p99 {st['p99'] * 1e6:7.0f} us   "
+              f"finished {st['finished']:.0%}")
+
+
+if __name__ == "__main__":
+    main()

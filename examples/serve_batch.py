@@ -1,0 +1,61 @@
+"""Batched serving with flowlet-style replica balancing.
+
+Two replicas of a small MoE model serve a stream of request bursts.  The
+dispatcher reuses FatPaths' flowlet idea: each burst ("flowlet") goes to a
+randomly chosen replica among those below their load watermark — elastic
+balancing with zero probing, exactly §3.2 applied to serving.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+
+import numpy as np
+import jax
+
+from repro import configs
+from repro.dist.sharding import Runtime
+from repro.models import model as model_mod
+from repro.serve.engine import ServeConfig, ServingEngine
+
+
+class FlowletDispatcher:
+    """Pick a replica per burst: random among un-congested (watermark),
+    falling back to least-loaded — no probing, elastic by construction."""
+
+    def __init__(self, engines, watermark: float = 0.75, seed: int = 0):
+        self.engines = engines
+        self.load = np.zeros(len(engines))
+        self.watermark = watermark
+        self.rng = np.random.default_rng(seed)
+
+    def dispatch(self, prompts, max_new):
+        ok = np.nonzero(self.load <= self.watermark * max(self.load.max(),
+                                                          1e-9))[0]
+        pick = int(self.rng.choice(ok)) if len(ok) else int(self.load.argmin())
+        self.load[pick] += len(prompts)
+        outs = self.engines[pick].run(prompts, max_new=max_new)
+        self.load[pick] *= 0.5          # decay: completed work drains
+        return pick, outs
+
+
+def main():
+    cfg = configs.get_smoke("olmoe-1b-7b")
+    rt = Runtime(mesh=None)
+    params = model_mod.init_params(cfg, rt, jax.random.PRNGKey(0))
+    sc = ServeConfig(batch=4, max_len=64)
+    replicas = [ServingEngine(cfg, rt, params, sc) for _ in range(2)]
+    disp = FlowletDispatcher(replicas)
+
+    rng = np.random.default_rng(1)
+    counts = np.zeros(2, dtype=int)
+    for burst in range(6):
+        prompts = [rng.integers(1, cfg.vocab, size=int(rng.integers(2, 7)))
+                   for _ in range(int(rng.integers(1, 5)))]
+        replica, outs = disp.dispatch(prompts, max_new=8)
+        counts[replica] += len(outs)
+        print(f"burst {burst}: {len(prompts)} reqs -> replica {replica}; "
+              f"first output: {outs[0][:6]}")
+    print(f"served per replica: {counts.tolist()} (balanced, no probing)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .checkpoint import CheckpointManager, save_checkpoint, restore_checkpoint  # noqa: F401

@@ -1,0 +1,93 @@
+"""Architecture registry + per-(arch, shape) input specs for the dry-run.
+
+``get_config(arch)`` / ``get_smoke(arch)`` return ModelConfigs;
+``input_specs(cfg, shape, rt)`` returns ShapeDtypeStruct stand-ins (weak-
+type-correct, shardable, no allocation) for every input of the step the
+shape lowers:
+
+  train_4k     -> {"tokens","labels"} (or {"embeds","labels"})
+  prefill_32k  -> {"tokens"} (or {"embeds"})
+  decode_*     -> ({"tokens"|"embeds"}: one step) + cache SDS tree
+
+The partition specs for the batch come from ``batch_specs``; params/opt/
+cache specs come from the model modules.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import P, Runtime
+from ..models.config import ModelConfig
+from .shapes import SHAPES, Shape, applicable, cell_matrix  # noqa: F401
+
+_MODULES = {
+    "glm4-9b": "glm4_9b",
+    "qwen2.5-32b": "qwen25_32b",
+    "gemma2-27b": "gemma2_27b",
+    "yi-9b": "yi_9b",
+    "zamba2-1.2b": "zamba2_1p2b",
+    "hubert-xlarge": "hubert_xlarge",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "rwkv6-7b": "rwkv6_7b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def _mod(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; choose from {ARCHS}")
+    return importlib.import_module(f".{_MODULES[arch]}", __package__)
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _mod(arch).config()
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return _mod(arch).smoke()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: str, rt: Optional[Runtime] = None
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for the step inputs of (cfg, shape)."""
+    sh = SHAPES[shape]
+    b = sh.global_batch
+    if sh.kind == "train":
+        if cfg.frontend is not None:
+            return {"embeds": _sds((b, sh.seq_len, cfg.frontend_dim),
+                                   jnp.bfloat16),
+                    "labels": _sds((b, sh.seq_len), jnp.int32)}
+        return {"tokens": _sds((b, sh.seq_len), jnp.int32),
+                "labels": _sds((b, sh.seq_len), jnp.int32)}
+    if sh.kind == "prefill":
+        if cfg.frontend is not None:
+            return {"embeds": _sds((b, sh.seq_len, cfg.frontend_dim),
+                                   jnp.bfloat16)}
+        return {"tokens": _sds((b, sh.seq_len), jnp.int32)}
+    # decode: one new token against a seq_len cache
+    if cfg.frontend is not None:
+        return {"embeds": _sds((b, 1, cfg.frontend_dim), jnp.bfloat16)}
+    return {"tokens": _sds((b, 1), jnp.int32)}
+
+
+def batch_specs(cfg: ModelConfig, shape: str, rt: Runtime) -> Dict[str, P]:
+    """PartitionSpecs matching input_specs (batch over fsdp)."""
+    sh = SHAPES[shape]
+    b = sh.global_batch
+    fs = rt.fsdp if b % max(rt.fsdp_size, 1) == 0 else None
+    out: Dict[str, P] = {}
+    for k, v in input_specs(cfg, shape).items():
+        out[k] = P(*((fs,) + (None,) * (len(v.shape) - 1)))
+    return out

@@ -1,0 +1,325 @@
+"""FatPaths layered routing (paper §5.2–§5.4).
+
+A *layer* is a subset of links with its own shortest-path forwarding
+function sigma_i.  Layer 0 always contains every link (minimal paths);
+layers 1..n-1 are rho-sparsified and oriented into DAGs by random vertex
+permutations (Listing 1), so their "shortest paths" are non-minimal paths
+of the full network — the "fat" path diversity.
+
+Construction schemes (§5.3):
+  * ``rand``    — Listing 1 verbatim: keep directed edge (u, v) with
+                  pi(u) < pi(v) and probability rho.
+  * ``pi_min``  — overlap-minimising variant (§5.3.2): edge inclusion
+                  probability is biased *against* edges already heavily used
+                  by the shortest paths of previously built layers.
+  * ``undir``   — ablation: sparsify without DAG orientation (layer graphs
+                  stay undirected; forwarding remains loop-free because it
+                  follows intra-layer shortest paths).
+  * ``spain``   — SPAIN adaptation: each layer is a BFS spanning tree from a
+                  random root (tree paths, resilience-style multipathing).
+  * ``past``    — PAST adaptation: per-layer re-randomised shortest-path
+                  trees on the full graph (one address-tree per layer).
+  * ``ksp``     — k-shortest-paths adaptation: per-layer randomly perturbed
+                  edge weights spread traffic over near-minimal paths.
+
+Forwarding is destination-based: ``nh[i, s, t]`` = next hop at router s for
+a packet tagged layer i, destination t.  Unreachable (layer, s, t) entries
+are -1; the load balancer (transport sim) only assigns flowlets to layers
+whose reach mask is set, and falls back to layer 0 otherwise (§C.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import paths as paths_mod
+from .topology import Topology
+
+__all__ = ["LayeredRouting", "build_layers", "layer_disjoint_paths"]
+
+_UNREACH = 10_000
+
+
+@dataclasses.dataclass
+class LayeredRouting:
+    """Stacked forwarding state for n layers over one topology."""
+
+    topo: Topology
+    scheme: str
+    rho: float
+    nh: np.ndarray          # (L, N, N) int32 next hop, -1 unreachable
+    reach: np.ndarray       # (L, N, N) bool
+    pathlen: np.ndarray     # (L, N, N) int16 intra-layer shortest-path length
+    layer_adj: np.ndarray   # (L, N, N) bool directed layer adjacency
+
+    @property
+    def n_layers(self) -> int:
+        return int(self.nh.shape[0])
+
+    def usable_layers(self, s: int, t: int) -> np.ndarray:
+        return np.nonzero(self.reach[:, s, t])[0]
+
+    def validate_loop_free(self, n_samples: int = 200, seed: int = 0,
+                           max_hops: int = 64) -> None:
+        """Walk the tables for random (layer, s, t); every reachable entry
+        must hit t within max_hops (shortest-path forwarding => loop-free)."""
+        rng = np.random.default_rng(seed)
+        L, N, _ = self.nh.shape
+        for _ in range(n_samples):
+            i = rng.integers(L)
+            s, t = rng.choice(N, size=2, replace=False)
+            if not self.reach[i, s, t]:
+                continue
+            cur, hops = s, 0
+            while cur != t:
+                nxt = self.nh[i, cur, t]
+                assert nxt >= 0, f"hole in layer {i} at ({cur}->{t})"
+                cur = int(nxt)
+                hops += 1
+                assert hops <= max_hops, f"loop in layer {i} ({s}->{t})"
+
+
+def _forwarding_from_dist(adj_dir: np.ndarray, dist: np.ndarray,
+                          seed: int, chunk: int = 64) -> np.ndarray:
+    """Vectorised single-next-hop table for a (possibly directed) graph."""
+    n = adj_dir.shape[0]
+    rng = np.random.default_rng(seed)
+    nh = np.full((n, n), -1, dtype=np.int32)
+    for s0 in range(0, n, chunk):
+        s1 = min(n, s0 + chunk)
+        # ok[s, u, t]: edge s->u exists and dist[u, t] == dist[s, t] - 1
+        ok = adj_dir[s0:s1, :, None] & (dist[None, :, :] == dist[s0:s1, None, :] - 1)
+        score = np.where(ok, rng.random(ok.shape, dtype=np.float32), -1.0)
+        best = score.argmax(axis=1).astype(np.int32)      # (chunk, t)
+        has = ok.any(axis=1)
+        nh[s0:s1] = np.where(has, best, -1)
+    idx = np.arange(n)
+    nh[idx, idx] = idx
+    return nh
+
+
+def _layer_tables(adj_dir: np.ndarray, seed: int, max_len: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    dist = np.asarray(
+        paths_mod.shortest_path_lengths(jnp.asarray(adj_dir), max_l=max_len))
+    reach = dist <= max_len
+    nh = _forwarding_from_dist(adj_dir, dist, seed)
+    pathlen = np.where(reach, dist, _UNREACH).astype(np.int16)
+    return nh, reach, pathlen
+
+
+def _rand_layer(adj: np.ndarray, rho: float, rng: np.random.Generator,
+                oriented: bool = True) -> np.ndarray:
+    """One Listing-1 layer: directed DAG (or undirected if not oriented)."""
+    n = adj.shape[0]
+    pi = rng.permutation(n)
+    iu, ju = np.nonzero(np.triu(adj, 1))
+    keep = rng.random(len(iu)) < rho
+    out = np.zeros((n, n), dtype=bool)
+    u, v = iu[keep], ju[keep]
+    if oriented:
+        fwd = pi[u] < pi[v]
+        uu = np.where(fwd, u, v)
+        vv = np.where(fwd, v, u)
+        out[uu, vv] = True
+    else:
+        out[u, v] = True
+        out[v, u] = True
+    return out
+
+
+def _edge_usage(nh: np.ndarray, reach: np.ndarray, max_hops: int) -> np.ndarray:
+    """Count how many (s, t) pairs route over each directed edge."""
+    n = nh.shape[0]
+    s_idx, t_idx = np.nonzero(reach & ~np.eye(n, dtype=bool))
+    usage = np.zeros((n, n), dtype=np.int64)
+    cur = s_idx.astype(np.int64).copy()
+    tgt = t_idx.astype(np.int64)
+    for _ in range(max_hops):
+        active = cur != tgt
+        if not active.any():
+            break
+        nxt = nh[cur[active], tgt[active]].astype(np.int64)
+        good = nxt >= 0
+        np.add.at(usage, (cur[active][good], nxt[good]), 1)
+        new_cur = cur.copy()
+        upd = np.where(good, nxt, tgt[active])
+        new_cur[np.nonzero(active)[0]] = upd
+        cur = new_cur
+    return usage
+
+
+def build_layers(topo: Topology, n_layers: int, rho: float,
+                 scheme: str = "rand", seed: int = 0,
+                 max_len: Optional[int] = None) -> LayeredRouting:
+    """Construct the FatPaths layer stack (layer 0 = all links, minimal)."""
+    adj = np.asarray(topo.adj, dtype=bool)
+    n = adj.shape[0]
+    if max_len is None:
+        # Allow "almost minimal" detours: nominal diameter + slack.
+        max_len = max(6, topo.diameter_nominal + 4)
+    rng = np.random.default_rng(seed)
+
+    layer_adjs: List[np.ndarray] = [adj.copy()]
+    if scheme in ("rand", "undir"):
+        for _ in range(n_layers - 1):
+            layer_adjs.append(_rand_layer(adj, rho, rng, oriented=(scheme == "rand")))
+    elif scheme == "pi_min":
+        # Build sequentially; bias sampling against accumulated edge usage.
+        usage = np.zeros((n, n), dtype=np.float64)
+        # Seed usage with the minimal-path layer's load.
+        nh0, reach0, _ = _layer_tables(adj, seed, max_len)
+        usage += _edge_usage(nh0, reach0, max_hops=max_len)
+        for li in range(n_layers - 1):
+            u_sym = usage + usage.T
+            if u_sym.max() > 0:
+                norm = u_sym / u_sym.max()
+            else:
+                norm = u_sym
+            pi = rng.permutation(n)
+            iu, ju = np.nonzero(np.triu(adj, 1))
+            # Edge keep-probability shrinks with historical usage but keeps
+            # expected density ~= rho.
+            raw = 1.0 - 0.75 * norm[iu, ju]
+            prob = raw * (rho * len(iu) / max(raw.sum(), 1e-9))
+            keep = rng.random(len(iu)) < np.clip(prob, 0.0, 1.0)
+            la = np.zeros((n, n), dtype=bool)
+            u, v = iu[keep], ju[keep]
+            fwd = pi[u] < pi[v]
+            uu = np.where(fwd, u, v)
+            vv = np.where(fwd, v, u)
+            la[uu, vv] = True
+            layer_adjs.append(la)
+            nh_i, reach_i, _ = _layer_tables(la, seed + 100 + li, max_len)
+            usage += _edge_usage(nh_i, reach_i, max_hops=max_len)
+    elif scheme == "spain":
+        for li in range(n_layers - 1):
+            root = int(rng.integers(n))
+            tree = _bfs_tree(adj, root, rng)
+            layer_adjs.append(tree)
+    elif scheme == "past":
+        for li in range(n_layers - 1):
+            layer_adjs.append(adj.copy())  # re-randomised tie-breaks below
+    elif scheme == "ksp":
+        for li in range(n_layers - 1):
+            layer_adjs.append(adj.copy())  # perturbed weights below
+    else:
+        raise ValueError(f"unknown scheme {scheme!r}")
+
+    nhs, reaches, plens = [], [], []
+    for i, la in enumerate(layer_adjs):
+        if scheme == "ksp" and i > 0:
+            nh, reach, plen = _ksp_tables(adj, seed + 17 * i, max_len, rng)
+        else:
+            nh, reach, plen = _layer_tables(la, seed + 17 * i, max_len)
+        nhs.append(nh)
+        reaches.append(reach)
+        plens.append(plen)
+
+    return LayeredRouting(
+        topo=topo, scheme=scheme, rho=rho,
+        nh=np.stack(nhs), reach=np.stack(reaches),
+        pathlen=np.stack(plens), layer_adj=np.stack(layer_adjs),
+    )
+
+
+def _bfs_tree(adj: np.ndarray, root: int, rng: np.random.Generator) -> np.ndarray:
+    """Random-order BFS spanning tree (undirected layer)."""
+    n = adj.shape[0]
+    tree = np.zeros((n, n), dtype=bool)
+    seen = np.zeros(n, dtype=bool)
+    seen[root] = True
+    frontier = [root]
+    while frontier:
+        nxt: List[int] = []
+        order = rng.permutation(len(frontier))
+        for fi in order:
+            v = frontier[fi]
+            nbrs = np.nonzero(adj[v] & ~seen)[0]
+            rng.shuffle(nbrs)
+            for u in nbrs:
+                if not seen[u]:
+                    seen[u] = True
+                    tree[v, u] = tree[u, v] = True
+                    nxt.append(int(u))
+        frontier = nxt
+    return tree
+
+
+def _ksp_tables(adj: np.ndarray, seed: int, max_len: int,
+                rng: np.random.Generator) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """k-shortest-paths-style layer: randomly perturbed edge weights spread
+    traffic over *near-minimal* paths.  Weighted shortest paths via repeated
+    (min, +) relaxation (Bellman-Ford on the weight matrix)."""
+    n = adj.shape[0]
+    w = np.where(adj, 1.0 + 0.25 * rng.random((n, n)), np.inf)
+    w = np.minimum(w, w.T)
+    np.fill_diagonal(w, 0.0)
+    dist = w.copy()
+    for _ in range(max_len):
+        # (min,+) product, chunked to bound memory.
+        new = dist.copy()
+        for s0 in range(0, n, 128):
+            s1 = min(n, s0 + 128)
+            new[s0:s1] = np.minimum(
+                new[s0:s1], (dist[s0:s1, :, None] + w[None, :, :]).min(axis=1))
+        if np.allclose(new, dist):
+            break
+        dist = new
+    hop = np.asarray(paths_mod.shortest_path_lengths(jnp.asarray(adj), max_l=max_len))
+    reach = hop <= max_len
+    # next hop: neighbor minimising w[s,u] + dist[u,t], random tie-break.
+    nh = np.full((n, n), -1, dtype=np.int32)
+    for s in range(n):
+        cost = w[s][:, None] + dist  # (u, t)
+        cost[~adj[s]] = np.inf
+        best = cost.argmin(axis=0).astype(np.int32)
+        nh[s] = np.where(np.isfinite(cost.min(axis=0)), best, -1)
+    idx = np.arange(n)
+    nh[idx, idx] = idx
+    plen = np.where(reach, hop, _UNREACH).astype(np.int16)
+    return nh, reach, plen
+
+
+def layer_disjoint_paths(lr: LayeredRouting, s: int, t: int,
+                         max_hops: int = 16) -> int:
+    """How many pairwise edge-disjoint (s->t) paths do the layers realise?
+
+    Greedy: walk each usable layer's path, keep it if it shares no
+    (undirected) edge with already-kept paths.  This is the quantity behind
+    the paper's "nine layers suffice for three disjoint paths" (Fig 12).
+    """
+    kept_edges = set()
+    count = 0
+    for i in range(lr.n_layers):
+        if not lr.reach[i, s, t]:
+            continue
+        path = paths_mod.walk_paths(lr.nh[i], np.array([s]), np.array([t]),
+                                    max_hops)[0]
+        edges = set()
+        ok = True
+        reached = False
+        prev = int(path[0])
+        for v in path[1:]:
+            v = int(v)
+            if prev == t:
+                reached = True
+                break
+            if v < 0:
+                ok = False
+                break
+            e = (min(prev, v), max(prev, v))
+            if e in kept_edges or e in edges:
+                ok = False
+                break
+            edges.add(e)
+            prev = v
+        if prev == t:
+            reached = True
+        if ok and reached and edges:
+            kept_edges |= edges
+            count += 1
+    return count

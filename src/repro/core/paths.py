@@ -1,0 +1,186 @@
+"""Path analysis via adjacency-matrix algebra (paper Appendix B.1).
+
+All heavy routines are JAX programs (vectorised boolean / counting matrix
+multiplication); on TPU the counting products route through the Pallas
+``pathcount`` kernel (see ``repro.kernels.pathcount``); the jnp expressions
+here are its oracle semantics.
+
+Counts are held in f32 and *saturate*: they are exact below 2**24, which is
+far beyond every threshold the paper's diversity metrics use (the paper
+cares about counts in the range 1..k' ~ tens).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "shortest_path_lengths",
+    "diameter",
+    "average_path_length",
+    "path_counts_exact_length",
+    "min_path_stats",
+    "next_hop_options",
+    "build_forwarding",
+    "walk_paths",
+]
+
+_SAT = jnp.float32(3.0e38)
+
+
+@functools.partial(jax.jit, static_argnames=("max_l",))
+def shortest_path_lengths(adj: jnp.ndarray, max_l: int = 64) -> jnp.ndarray:
+    """All-pairs shortest path lengths via boolean adjacency powers.
+
+    Args:
+      adj: (N, N) bool adjacency.
+      max_l: iteration cap (>= diameter).
+
+    Returns:
+      (N, N) int32 distance matrix; unreachable pairs get ``max_l + 1``;
+      diagonal is 0.
+    """
+    n = adj.shape[0]
+    a = adj.astype(jnp.bool_)
+    dist0 = jnp.where(jnp.eye(n, dtype=bool), 0, jnp.where(a, 1, max_l + 1))
+
+    def body(state):
+        dist, reach, l, changed = state
+        nreach = (reach.astype(jnp.float32) @ a.astype(jnp.float32)) > 0
+        newly = nreach & ~reach
+        dist = jnp.where(newly & (dist > l + 1), l + 1, dist)
+        return dist, reach | nreach, l + 1, newly.any()
+
+    def cond(state):
+        _, _, l, changed = state
+        return jnp.logical_and(changed, l < max_l)
+
+    reach0 = a | jnp.eye(n, dtype=bool)
+    dist, _, _, _ = jax.lax.while_loop(cond, body, (dist0.astype(jnp.int32), reach0, jnp.int32(1), jnp.bool_(True)))
+    return dist
+
+
+def diameter(adj: np.ndarray, max_l: int = 64) -> int:
+    d = np.asarray(shortest_path_lengths(jnp.asarray(adj), max_l=max_l))
+    finite = d[d <= max_l]
+    return int(finite.max())
+
+
+def average_path_length(adj: np.ndarray, max_l: int = 64) -> float:
+    n = adj.shape[0]
+    d = np.asarray(shortest_path_lengths(jnp.asarray(adj), max_l=max_l)).astype(np.float64)
+    off = ~np.eye(n, dtype=bool)
+    return float(d[off].mean())
+
+
+@functools.partial(jax.jit, static_argnames=("l",))
+def path_counts_exact_length(adj: jnp.ndarray, l: int) -> jnp.ndarray:
+    """Number of length-``l`` walks between every pair (Theorem 1), saturating f32."""
+    a = adj.astype(jnp.float32)
+    out = a
+    for _ in range(l - 1):
+        out = jnp.minimum(out @ a, _SAT)
+    return out
+
+
+def min_path_stats(adj: np.ndarray, max_l: int = 8) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-pair (l_min, c_min): shortest-path length and multiplicity (§4.2.1).
+
+    c_min counts *shortest walks*, which for the minimal length equal
+    shortest paths (no repeated vertex fits in a minimal walk).
+    """
+    adj_j = jnp.asarray(adj)
+    dist = np.asarray(shortest_path_lengths(adj_j, max_l=max_l))
+    n = adj.shape[0]
+    counts = np.zeros((n, n), dtype=np.float64)
+    power = jnp.asarray(adj, dtype=jnp.float32)
+    a = jnp.asarray(adj, dtype=jnp.float32)
+    cur = power
+    for l in range(1, max_l + 1):
+        mask = dist == l
+        if mask.any():
+            counts[mask] = np.asarray(cur)[mask]
+        if l < max_l:
+            cur = jnp.minimum(cur @ a, _SAT)
+    return dist, counts
+
+
+def next_hop_options(adj: np.ndarray, dist: Optional[np.ndarray] = None,
+                     max_l: int = 64) -> np.ndarray:
+    """(N, N, N) bool: ``opt[s, t, u]`` — u is a valid shortest-path next hop
+    from s towards t.  This is the set-semiring routing-table construction of
+    Appendix B.1.1, expressed as a distance test:
+    u is a next hop iff adj[s, u] and dist[u, t] == dist[s, t] - 1.
+
+    Memory is O(N^3) bits; callers with large N should use
+    :func:`build_forwarding` which keeps one random choice per (s, t).
+    """
+    if dist is None:
+        dist = np.asarray(shortest_path_lengths(jnp.asarray(adj), max_l=max_l))
+    a = np.asarray(adj, dtype=bool)
+    n = a.shape[0]
+    out = np.zeros((n, n, n), dtype=bool)
+    for s in range(n):
+        # valid u: a[s, u] and dist[u, t] == dist[s, t] - 1
+        ok = a[s][:, None] & (dist == dist[s][None, :] - 1)  # (u, t)
+        out[s] = ok.T  # (t, u)
+    return out
+
+
+def build_forwarding(adj: np.ndarray, dist: Optional[np.ndarray] = None,
+                     seed: int = 0, max_l: int = 64) -> np.ndarray:
+    """Single-next-hop forwarding table for shortest-path routing (§5.4).
+
+    Returns (N, N) int32 ``nh[s, t]`` = next router from s towards t
+    (``nh[t, t] = t``); a random choice among equal-cost options, matching
+    the paper's "choose a random first step port if there are multiple".
+    Unreachable pairs get -1.
+    """
+    a = np.asarray(adj, dtype=bool)
+    n = a.shape[0]
+    if dist is None:
+        dist = np.asarray(shortest_path_lengths(jnp.asarray(a), max_l=max_l))
+    rng = np.random.default_rng(seed)
+    nh = np.full((n, n), -1, dtype=np.int32)
+    for s in range(n):
+        # (u, t): u neighbor of s on a shortest path to t; random tie-break.
+        ok = a[s][:, None] & (dist == dist[s][None, :] - 1)
+        score = np.where(ok, rng.random((n, n)), -1.0)
+        best = score.argmax(axis=0)
+        has = ok.any(axis=0)
+        nh[s] = np.where(has, best, -1)
+        nh[s, s] = s
+    reach = dist <= max_l
+    nh[~reach] = -1
+    np.fill_diagonal(nh, np.arange(n))
+    return nh
+
+
+def walk_paths(nh: np.ndarray, s: np.ndarray, t: np.ndarray, max_hops: int) -> np.ndarray:
+    """Materialise router sequences by iterating a forwarding table.
+
+    Args:
+      nh: (N, N) next-hop table.
+      s, t: (F,) endpoints.
+      max_hops: path length cap.
+
+    Returns:
+      (F, max_hops + 1) int32 router ids; after reaching t the sequence
+      repeats t.  A -1 appears if the table cannot route.
+    """
+    s = np.asarray(s, dtype=np.int32)
+    t = np.asarray(t, dtype=np.int32)
+    out = np.zeros((len(s), max_hops + 1), dtype=np.int32)
+    cur = s.copy()
+    out[:, 0] = cur
+    for h in range(1, max_hops + 1):
+        nxt = nh[cur, t]
+        dead = (nxt < 0) | (cur < 0)
+        cur = np.where(dead, -1, np.where(cur == t, t, nxt)).astype(np.int32)
+        out[:, h] = cur
+    return out

@@ -1,0 +1,303 @@
+"""Flow-level transport + load-balancing simulator (paper §7, htsim analogue).
+
+A vectorised discrete-time simulator written as a single ``jax.lax.scan``:
+all flows advance simultaneously in Δt steps; link sharing is an iterative
+max-min water-filling approximation that never oversubscribes a link.
+
+Modelled per paper §3 / §7.1.3:
+
+* **Transport** —
+  - ``ndp``  ("purified"): senders start at line rate; per-step rate equals
+    the receiver-driven fair share (trimming => no timeouts, headers always
+    arrive).
+  - ``tcp``: slow start from a small window, AIMD (halve on congestion),
+    additive increase otherwise.
+  - ``dctcp``: like tcp but gentle multiplicative decrease (ECN-style).
+* **Load balancing** —
+  - ``ecmp``: flow hashes onto one of ``n_ecmp`` minimal-path forwarding
+    tables at start; never re-routes.
+  - ``letflow``: flowlet re-routing among the minimal tables only.
+  - ``fatpaths``: flowlet re-routing across FatPaths layers (minimal +
+    non-minimal); layer choice uniform among layers that can route (s, t)
+    (fallback guarantees layer 0 always can).
+* **Flowlet elasticity** — the probability that a flowlet gap occurs in a
+  step grows as the flow's achieved rate falls:
+  ``p_gap = dt/gap * (1 - rate/line + eps)`` — slow (congested) flows
+  re-roll paths often, fast flows stick (paper §3.2).
+
+Endpoint NICs are modelled as virtual links (injection + ejection), so
+incast (all-to-one) and concentration effects are captured.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import LayeredRouting
+from .topology import Topology
+from .traffic import FlowWorkload
+
+__all__ = ["SimConfig", "SimResult", "simulate", "ecmp_routing"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    transport: str = "ndp"          # ndp | tcp | dctcp
+    balancing: str = "fatpaths"     # ecmp | letflow | fatpaths
+    dt: float = 10e-6               # seconds per step
+    n_steps: int = 2000
+    line_rate: float = 12.5e9       # bytes/s (100 GbE)
+    link_latency: float = 1e-6      # per hop (INET-matched fixed delay)
+    sw_latency: float = 10e-6       # endpoint software stack latency
+    flowlet_gap: float = 50e-6      # LetFlow-style gap timescale
+    gap_eps: float = 0.05           # baseline re-roll probability factor
+    max_hops: int = 12
+    fair_iters: int = 2             # water-filling refinement iterations
+    tcp_init: float = 0.05          # initial rate fraction (slow start)
+    tcp_ai: float = 0.02            # additive increase per step (frac of line)
+    tcp_md: float = 0.5             # multiplicative decrease (tcp)
+    dctcp_md: float = 0.85          # gentle decrease (dctcp)
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SimResult:
+    fct: np.ndarray            # (F,) seconds; NaN if unfinished
+    delivered: np.ndarray      # (F,) bytes delivered
+    size: np.ndarray           # (F,) flow sizes
+    finished: np.ndarray       # (F,) bool
+    link_util_mean: float
+    config: SimConfig
+
+    @property
+    def throughput_per_flow(self) -> np.ndarray:
+        return np.where(self.finished, self.size / np.maximum(self.fct, 1e-12),
+                        np.nan)
+
+    def fct_stats(self) -> Dict[str, float]:
+        ok = self.finished
+        f = self.fct[ok]
+        if len(f) == 0:
+            return {"mean": float("nan"), "p50": float("nan"),
+                    "p99": float("nan"), "finished": 0.0}
+        return {
+            "mean": float(f.mean()),
+            "p50": float(np.quantile(f, 0.50)),
+            "p99": float(np.quantile(f, 0.99)),
+            "finished": float(ok.mean()),
+        }
+
+
+def ecmp_routing(topo: Topology, n_tables: int = 8, seed: int = 0,
+                 max_len: Optional[int] = None) -> LayeredRouting:
+    """Minimal-path-only multi-table routing: n differently tie-broken
+    shortest-path tables (flow-hash ECMP / LetFlow substrate)."""
+    from . import paths as paths_mod
+
+    adj = np.asarray(topo.adj, dtype=bool)
+    if max_len is None:
+        max_len = max(6, topo.diameter_nominal + 2)
+    dist = np.asarray(
+        paths_mod.shortest_path_lengths(jnp.asarray(adj), max_l=max_len))
+    reach = dist <= max_len
+    nhs = [paths_mod.build_forwarding(adj, dist, seed=seed + i)
+           for i in range(n_tables)]
+    plen = np.where(reach, dist, 10_000).astype(np.int16)
+    return LayeredRouting(
+        topo=topo, scheme="ecmp", rho=1.0,
+        nh=np.stack(nhs), reach=np.stack([reach] * n_tables),
+        pathlen=np.stack([plen] * n_tables),
+        layer_adj=np.stack([adj] * n_tables),
+    )
+
+
+def _prepare(topo: Topology, routing: LayeredRouting, wl: FlowWorkload,
+             cfg: SimConfig):
+    """Static arrays for the scan."""
+    eix = topo.edge_index_matrix()              # (N, N) -> directed edge id
+    n_edges = int((eix >= 0).sum())
+    n_ep = wl.src.max() + 1 if len(wl.src) else 1
+    n_ep = int(max(n_ep, wl.dst.max() + 1))
+    # virtual links: [0, E) fabric, [E, E+n_ep) injection, [E+n_ep, ..) eject,
+    # final slot = trash for -1 scatter.
+    e_inj = n_edges
+    e_ej = n_edges + n_ep
+    e_tot = n_edges + 2 * n_ep + 1
+    return dict(
+        nh=jnp.asarray(routing.nh),                    # (L, N, N)
+        reach=jnp.asarray(routing.reach),              # (L, N, N)
+        eix=jnp.asarray(eix),                          # (N, N)
+        src_r=jnp.asarray(wl.src_router),
+        dst_r=jnp.asarray(wl.dst_router),
+        src_e=jnp.asarray(wl.src + e_inj),
+        dst_e=jnp.asarray(wl.dst + e_ej),
+        size=jnp.asarray(wl.size, dtype=jnp.float32),
+        start=jnp.asarray(wl.start, dtype=jnp.float32),
+        e_tot=e_tot,
+        n_layers=routing.nh.shape[0],
+    )
+
+
+def _flow_edges(nh, eix, layer, src_r, dst_r, max_hops):
+    """(F, max_hops) directed fabric edge ids along each flow's current path
+    (-1 padding once the destination router is reached)."""
+    f = src_r.shape[0]
+    cur = src_r
+    ids = []
+    for _ in range(max_hops):
+        nxt = nh[layer, cur, dst_r]                    # (F,)
+        at_dst = cur == dst_r
+        hole = nxt < 0
+        e = jnp.where(at_dst | hole, -1, eix[cur, jnp.where(hole, cur, nxt)])
+        ids.append(e)
+        cur = jnp.where(at_dst | hole, cur, nxt)
+    return jnp.stack(ids, axis=1), cur == dst_r        # (F, H), routed ok
+
+
+def _pick_layers(key, reach, src_r, dst_r, minimal_only_mask, n_layers):
+    """Uniform choice among usable layers per flow (layer 0 fallback)."""
+    usable = reach[:, src_r, dst_r].T                  # (F, L)
+    usable = usable & minimal_only_mask[None, :]
+    g = jax.random.gumbel(key, usable.shape)
+    g = jnp.where(usable, g, -jnp.inf)
+    pick = jnp.argmax(g, axis=1).astype(jnp.int32)
+    any_ok = usable.any(axis=1)
+    return jnp.where(any_ok, pick, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "static"))
+def _run_scan(arrs, cfg: SimConfig, static: Tuple[int, int, int]):
+    e_tot, n_layers, n_steps = static
+    f = arrs["size"].shape[0]
+    line_bytes = jnp.float32(cfg.line_rate * cfg.dt)   # bytes per step at line
+
+    minimal_only = jnp.ones(n_layers, dtype=bool)
+    is_fatpaths = cfg.balancing == "fatpaths"
+    reroute = cfg.balancing in ("letflow", "fatpaths")
+
+    key0 = jax.random.PRNGKey(cfg.seed)
+    k_init, k_scan = jax.random.split(key0)
+    layer0 = _pick_layers(k_init, arrs["reach"], arrs["src_r"], arrs["dst_r"],
+                          minimal_only, n_layers)
+
+    if cfg.transport == "ndp":
+        rate0 = jnp.ones(f, dtype=jnp.float32)         # line rate start
+    else:
+        rate0 = jnp.full(f, cfg.tcp_init, dtype=jnp.float32)
+
+    init = dict(
+        remaining=arrs["size"],
+        layer=layer0,
+        rate=rate0,
+        fct=jnp.full(f, jnp.nan, dtype=jnp.float32),
+        hops=jnp.zeros(f, dtype=jnp.float32),
+        key=k_scan,
+        util_acc=jnp.float32(0.0),
+    )
+
+    cap = jnp.ones(e_tot, dtype=jnp.float32)           # capacities in line units
+
+    def step(state, i):
+        t = i.astype(jnp.float32) * cfg.dt
+        key, k_gap, k_pick = jax.random.split(state["key"], 3)
+        started = arrs["start"] <= t
+        done = state["remaining"] <= 0
+        active = started & ~done
+
+        edges, routed = _flow_edges(arrs["nh"], arrs["eix"], state["layer"],
+                                    arrs["src_r"], arrs["dst_r"], cfg.max_hops)
+        n_hops = (edges >= 0).sum(axis=1).astype(jnp.float32)
+        # Full edge set per flow: fabric hops + injection + ejection NIC.
+        all_edges = jnp.concatenate(
+            [edges, arrs["src_e"][:, None], arrs["dst_e"][:, None]], axis=1)
+        all_edges = jnp.where(active[:, None] & routed[:, None],
+                              jnp.where(all_edges < 0, e_tot - 1, all_edges),
+                              e_tot - 1)
+
+        # --- iterative max-min approximation (feasible by construction) ----
+        w = active.astype(jnp.float32) * routed.astype(jnp.float32)
+        desired = jnp.minimum(state["rate"], 1.0) * w
+        onehot_count = jnp.zeros(e_tot).at[all_edges.reshape(-1)].add(
+            jnp.repeat(w, all_edges.shape[1]))
+        fair = cap / jnp.maximum(onehot_count, 1e-9)
+        adv = jnp.min(jnp.where(all_edges < e_tot - 1,
+                                fair[all_edges], jnp.inf), axis=1)
+        d = jnp.minimum(desired, adv)
+        for _ in range(cfg.fair_iters):
+            load = jnp.zeros(e_tot).at[all_edges.reshape(-1)].add(
+                jnp.repeat(d, all_edges.shape[1]))
+            scale = jnp.minimum(1.0, cap / jnp.maximum(load, 1e-9))
+            s = jnp.min(jnp.where(all_edges < e_tot - 1,
+                                  scale[all_edges], jnp.inf), axis=1)
+            s = jnp.where(jnp.isfinite(s), s, 0.0)
+            d = d * s
+        sent = d  # fraction of line rate actually achieved this step
+        share = adv  # the fair share signal (congestion feedback)
+
+        delivered = sent * line_bytes
+        new_remaining = jnp.maximum(state["remaining"] - delivered * w, 0.0)
+        newly_done = (new_remaining <= 0) & ~done & started
+        # FCT includes propagation + software latency along the path taken.
+        fct_now = (t + cfg.dt - arrs["start"]
+                   + n_hops * cfg.link_latency + cfg.sw_latency)
+        fct = jnp.where(newly_done, fct_now, state["fct"])
+        hops = jnp.where(newly_done, n_hops, state["hops"])
+
+        # --- transport rate dynamics --------------------------------------
+        if cfg.transport == "ndp":
+            rate = jnp.ones(f, dtype=jnp.float32)
+        else:
+            congested = share < state["rate"] * 0.98
+            md = cfg.tcp_md if cfg.transport == "tcp" else cfg.dctcp_md
+            slow_start = state["rate"] < 0.5
+            up = jnp.where(slow_start, state["rate"] * 2.0,
+                           state["rate"] + cfg.tcp_ai)
+            rate = jnp.where(congested, jnp.maximum(share * md, cfg.tcp_init),
+                             jnp.minimum(up, 1.0))
+
+        # --- flowlet elasticity + layer re-roll -----------------------------
+        if reroute:
+            slack = 1.0 - jnp.clip(sent, 0.0, 1.0)
+            p_gap = jnp.clip(cfg.dt / cfg.flowlet_gap
+                             * (slack + cfg.gap_eps), 0.0, 1.0)
+            roll = jax.random.uniform(k_gap, (f,)) < p_gap
+            newpick = _pick_layers(k_pick, arrs["reach"], arrs["src_r"],
+                                   arrs["dst_r"], minimal_only, n_layers)
+            layer = jnp.where(roll & active, newpick, state["layer"])
+        else:
+            layer = state["layer"]
+
+        util = sent.sum() / jnp.maximum(w.sum(), 1.0)
+        out = dict(remaining=new_remaining, layer=layer, rate=rate, fct=fct,
+                   hops=hops, key=key, util_acc=state["util_acc"] + util)
+        return out, None
+
+    final, _ = jax.lax.scan(step, init, jnp.arange(n_steps))
+    return final
+
+
+def simulate(topo: Topology, routing: LayeredRouting, wl: FlowWorkload,
+             cfg: SimConfig) -> SimResult:
+    """Run the flow simulator; returns per-flow FCTs and aggregates."""
+    arrs = _prepare(topo, routing, wl, cfg)
+    static = (int(arrs["e_tot"]), int(arrs["n_layers"]), int(cfg.n_steps))
+    jarrs = {k: v for k, v in arrs.items() if k not in ("e_tot", "n_layers")}
+    final = _run_scan(jarrs, cfg, static)
+    remaining = np.asarray(final["remaining"])
+    size = np.asarray(arrs["size"])
+    fct = np.asarray(final["fct"])
+    finished = remaining <= 0
+    return SimResult(
+        fct=fct,
+        delivered=size - remaining,
+        size=size,
+        finished=finished,
+        link_util_mean=float(final["util_acc"]) / cfg.n_steps,
+        config=cfg,
+    )

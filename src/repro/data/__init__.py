@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, SyntheticDataset, make_global_batch  # noqa: F401

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the paper's compute hot spots + substrate.
+
+* ``pathcount``       — saturating f32 path-count matmul (Appendix B.1).
+* ``gfmm``            — GF(p) modular matmul, Cheung connectivity (App. B.3).
+* ``flash_attention`` — online-softmax attention (GQA/window/softcap), the
+                        LM substrate's dominant kernel.
+
+``ops`` holds the jit'd public wrappers; ``ref`` the pure-jnp oracles.
+Validated with interpret=True on CPU; TPU (Mosaic) is the target.
+"""
+
+from . import ops, ref  # noqa: F401
+from .flash_attention import flash_attention  # noqa: F401
+from .gfmm import gf_matmul  # noqa: F401
+from .pathcount import pathcount_matmul  # noqa: F401

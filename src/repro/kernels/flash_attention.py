@@ -1,0 +1,148 @@
+"""Pallas TPU kernel: flash attention (online softmax) for the LM substrate.
+
+Supports the features the assigned architectures need:
+  * GQA (n_kv_heads <= n_heads, grouped lookup),
+  * causal masking (decoder LMs) or none (HuBERT encoder),
+  * sliding-window causal masking (gemma2 local layers),
+  * logit soft-capping (gemma2),
+  * arbitrary scale (RoPE'd q/k are produced by the model).
+
+Tiling: grid (B, H, Sq/bq, Sk/bk) with the KV dimension innermost; running
+max / denominator / accumulator live in VMEM scratch and persist across the
+sequential KV grid steps (canonical Pallas flash reduction).  Q/K/V blocks
+are (bq, d) / (bk, d) VMEM tiles; d padded to a lane multiple of 128.
+
+The pure-jnp oracle is ``repro.kernels.ref.attention_ref``; tests sweep
+shapes, dtypes, GQA groups, windows and softcap against it in interpret
+mode (this container is CPU-only; TPU is the target).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU memory-space scratch specs (work under interpret mode too)
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    _VMEM = None
+
+__all__ = ["flash_attention"]
+
+_LANES = 128
+_NEG_INF = float("-inf")
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int, softcap: float,
+                  bq: int, bk: int, nk: int, sk: int):
+    jk = pl.program_id(3)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale      # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)              # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    iq = pl.program_id(2)
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = jk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < sk                                  # KV padding
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[:, :1]                             # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # Rows with no unmasked key so far keep m == -inf; all terms below are
+    # explicitly zeroed for them so no NaNs can form.
+    dead = m_new == _NEG_INF
+    p = jnp.where(mask, jnp.exp(s - jnp.where(dead, 0.0, m_new)), 0.0)
+    alpha = jnp.where(dead, 0.0, jnp.exp(m_prev - m_new))
+    l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=1, keepdims=True)
+    pv = jax.lax.dot_general(p, v_ref[0, 0].astype(jnp.float32),
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = alpha * acc_ref[...] + pv
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(jk == nk - 1)
+    def _fin():
+        l = l_ref[:, :1]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "bq", "bk",
+                     "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, scale: Optional[float] = None,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Flash attention over (B, H, S, D) tensors with GQA via head grouping.
+
+    Args:
+      q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D) with H % Hkv == 0.
+      window: if > 0, causal sliding window of this many positions.
+      softcap: if > 0, gemma2-style logit soft-capping.
+    Returns (B, H, Sq, D) in q's dtype.
+    """
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
+    if scale is None:
+        scale = float(d) ** -0.5
+
+    sq_p = -(-sq // bq) * bq
+    sk_p = -(-sk // bk) * bk
+    d_p = -(-d // _LANES) * _LANES
+    qp = jnp.zeros((b, h, sq_p, d_p), q.dtype).at[:, :, :sq, :d].set(q)
+    kp = jnp.zeros((b, hkv, sk_p, d_p), k.dtype).at[:, :, :sk, :d].set(k)
+    vp = jnp.zeros((b, hkv, sk_p, d_p), v.dtype).at[:, :, :sk, :d].set(v)
+    nq, nk = sq_p // bq, sk_p // bk
+
+    kern = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, bq=bq, bk=bk, nk=nk, sk=sk)
+    scratch = [
+        _VMEM((bq, _LANES), jnp.float32),   # running max
+        _VMEM((bq, _LANES), jnp.float32),   # running denominator
+        _VMEM((bq, d_p), jnp.float32),      # output accumulator
+    ]
+    out = pl.pallas_call(
+        kern,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d_p), lambda bb, hh, ii, jj: (bb, hh, ii, 0)),
+            pl.BlockSpec((1, 1, bk, d_p),
+                         lambda bb, hh, ii, jj, g=group: (bb, hh // g, jj, 0)),
+            pl.BlockSpec((1, 1, bk, d_p),
+                         lambda bb, hh, ii, jj, g=group: (bb, hh // g, jj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d_p),
+                               lambda bb, hh, ii, jj: (bb, hh, ii, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq_p, d_p), q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :sq, :d]

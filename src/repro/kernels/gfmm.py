@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: GF(p) modular matmul for connectivity propagation.
+
+The Cheung et al. edge-connectivity algorithm (paper Appendix B.3) iterates
+``M <- (M @ K + I) mod p`` over a finite field.  This kernel computes one
+modular matmul ``C = (A @ B) mod p`` with per-K-tile reduction.
+
+Two arithmetic modes (TPU hardware adaptation, DESIGN.md §2b):
+
+* ``int32``: products p^2 and K-tile sums bk * p^2 must stay < 2^31, so
+  p <= 4093 with bk <= 128.  Exact; int matmul is emulated on the MXU.
+* ``f32``: uses the native f32 MXU; exact while bk * p^2 < 2^24, so
+  p <= 251 with bk <= 256.  This is the fast TPU path; the field is smaller
+  so the rank estimate's failure probability rises (still < E^2/p per
+  Cheung's analysis — callers re-run with fresh coefficients to confirm).
+
+The modulo is applied after every K tile, keeping the accumulator bounded.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["gf_matmul", "GF_P_INT32", "GF_P_F32"]
+
+GF_P_INT32 = 1009   # bk * p^2 = 128 * 1009^2 ~ 1.3e8 < 2^31
+GF_P_F32 = 251      # bk * p^2 = 256 * 251^2 ~ 1.6e7 < 2^24
+
+
+def _gfmm_kernel(a_ref, b_ref, o_ref, *, p: int, mode: str):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    if mode == "int32":
+        prod = jax.lax.dot_general(
+            a_ref[...].astype(jnp.int32), b_ref[...].astype(jnp.int32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+        o_ref[...] = (o_ref[...] + prod % p) % p
+    else:  # f32 MXU path
+        prod = jax.lax.dot_general(
+            a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc = o_ref[...] + prod
+        o_ref[...] = acc - jnp.floor(acc / p) * p
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("p", "mode", "bm", "bn", "bk", "interpret"))
+def gf_matmul(a: jnp.ndarray, b: jnp.ndarray, *, p: int = GF_P_INT32,
+              mode: str = "int32", bm: int = 128, bn: int = 128,
+              bk: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """(A @ B) mod p with per-tile modular reduction.
+
+    Inputs must already be reduced mod p (values in [0, p)).
+    """
+    if mode == "int32":
+        assert bk * p * p < 2**31, (bk, p)
+        dt = jnp.int32
+    elif mode == "f32":
+        assert bk * p * p < 2**24, (bk, p)
+        dt = jnp.float32
+    else:
+        raise ValueError(mode)
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    kp = -(-k // bk) * bk
+    a_p = jnp.zeros((mp, kp), dt).at[:m, :k].set(a.astype(dt))
+    b_p = jnp.zeros((kp, np_), dt).at[:k, :n].set(b.astype(dt))
+
+    out = pl.pallas_call(
+        functools.partial(_gfmm_kernel, p=p, mode=mode),
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), dt),
+        interpret=interpret,
+    )(a_p, b_p)
+    return out[:m, :n].astype(jnp.int32)

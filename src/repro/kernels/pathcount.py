@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: saturating path-count matmul (paper Appendix B.1).
+
+Computes ``C = min(A @ B, SAT)`` where A, B hold walk counts (Theorem 1:
+powers of the adjacency matrix count walks).  Counts are f32 — exact below
+2**24, saturating at ``SAT`` far above any diversity threshold the paper
+uses — so the MXU's native f32 path does the work, which is the TPU-correct
+adaptation of "integer path counting" (no int64 on TPU; int32 matmul is
+emulated and slow).
+
+Tiling: (bm, bk) x (bk, bn) MXU tiles, K innermost grid dimension with the
+output block revisited and accumulated in place (standard Pallas reduction
+pattern); saturation is applied per K-step, which is semantics-preserving
+because SAT + x -> inf -> min(...) == SAT (monotone absorbing).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["pathcount_matmul", "SAT"]
+
+SAT = 3.0e38
+
+
+def _pathcount_kernel(a_ref, b_ref, o_ref, *, sat: float):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    prod = jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.minimum(o_ref[...] + prod, sat)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "sat", "interpret"))
+def pathcount_matmul(a: jnp.ndarray, b: jnp.ndarray, *, bm: int = 128,
+                     bn: int = 128, bk: int = 128, sat: float = SAT,
+                     interpret: bool = True) -> jnp.ndarray:
+    """min(A @ B, sat) with (bm, bn, bk) VMEM tiling.
+
+    Inputs are zero-padded to tile multiples; the pad region contributes
+    zeros to the accumulation (exact).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    kp = -(-k // bk) * bk
+    a_p = jnp.zeros((mp, kp), jnp.float32).at[:m, :k].set(a.astype(jnp.float32))
+    b_p = jnp.zeros((kp, np_), jnp.float32).at[:k, :n].set(b.astype(jnp.float32))
+
+    out = pl.pallas_call(
+        functools.partial(_pathcount_kernel, sat=sat),
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(a_p, b_p)
+    return out[:m, :n]

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+__all__ = ["pathcount_ref", "gf_matmul_ref", "attention_ref"]
+
+
+def pathcount_ref(a: jnp.ndarray, b: jnp.ndarray, sat: float = 3.0e38) -> jnp.ndarray:
+    """min(A @ B, sat) in f32 (exact below 2**24)."""
+    return jnp.minimum(
+        a.astype(jnp.float32) @ b.astype(jnp.float32), jnp.float32(sat))
+
+
+def gf_matmul_ref(a: jnp.ndarray, b: jnp.ndarray, p: int) -> jnp.ndarray:
+    """(A @ B) mod p, exact via float64-free int path: accumulate in chunks
+    small enough that int32 cannot overflow (mirrors the kernel's tiling)."""
+    a = a.astype(jnp.int64) % p
+    b = b.astype(jnp.int64) % p
+    return ((a @ b) % p).astype(jnp.int32)
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int = 0, softcap: float = 0.0,
+                  scale: Optional[float] = None) -> jnp.ndarray:
+    """Naive (materialised-logits) attention with GQA/window/softcap."""
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = h // hkv
+    if scale is None:
+        scale = float(d) ** -0.5
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    denom = p.sum(axis=-1, keepdims=True)
+    p = p / jnp.where(denom == 0, 1.0, denom)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,276 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above run before ANY other import (jax locks the device
+count at first init).  For every runnable cell this driver:
+
+  1. builds the production mesh — (16, 16) ("data", "model") single-pod or
+     (2, 16, 16) ("pod", "data", "model") multi-pod;
+  2. assembles the step the shape dictates (train_step / prefill / decode)
+     with in_shardings from the model's PartitionSpec trees;
+  3. ``jit(...).lower(**ShapeDtypeStructs).compile()`` — no allocation;
+  4. records ``memory_analysis()``, ``cost_analysis()`` and the parsed
+     collective wire bytes to JSON under --out (resumable: done cells are
+     skipped unless --force).
+
+Usage:
+  python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+  python -m repro.launch.dryrun --all --tag ep --moe-mode ep  # hillclimb
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def _build_runtime(multi_pod: bool, args):
+    from repro.dist.sharding import Runtime
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    data_axes = ("pod", "data") if multi_pod else ("data",)
+    if getattr(args, "fsdp_only", False):
+        # same physical mesh; the 'model' axis is logically a data axis
+        data_axes = data_axes + ("model",)
+        return Runtime(
+            mesh=mesh, data_axes=data_axes, model_axis="model",
+            tp_disabled=True,
+            sequence_parallel=False,
+            moe_mode="tp",
+            seq_sharded_decode=False,
+            collective_dtype=args.collective_dtype,
+        )
+    return Runtime(
+        mesh=mesh,
+        data_axes=data_axes,
+        model_axis="model",
+        sequence_parallel=args.sequence_parallel,
+        moe_mode=args.moe_mode,
+        seq_sharded_decode=not args.no_seq_sharded_decode,
+        collective_dtype=args.collective_dtype,
+    )
+
+
+def _sds_tree(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool, args):
+    """Returns (lowered, compiled, meta) for one cell."""
+    from repro import configs
+    from repro.models import model as model_mod
+    from repro.serve.engine import ServeConfig, make_decode_step, \
+        make_prefill_step
+    from repro.train.optimizer import adamw_init
+    from repro.train.train_step import TrainConfig, make_train_step
+
+    cfg = configs.get_config(arch)
+    if args.remat:
+        cfg = dataclasses.replace(cfg, remat=args.remat)
+    sh = configs.SHAPES[shape]
+    rt = _build_runtime(multi_pod, args)
+    mesh = rt.mesh
+
+    key_sds = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params_sds = _sds_tree(functools.partial(model_mod.init_params, cfg, rt),
+                           key_sds)
+    pspecs = model_mod.param_specs(cfg, rt)
+    p_shardings = rt.tree_sharding(pspecs)
+    batch_sds = configs.input_specs(cfg, shape, rt)
+    b_specs = configs.batch_specs(cfg, shape, rt)
+    b_shardings = {k: jax.NamedSharding(mesh, v) for k, v in b_specs.items()}
+
+    with mesh:
+        if sh.kind == "train":
+            tc = TrainConfig(grad_accum=args.grad_accum)
+            step = make_train_step(cfg, rt, tc)
+            opt_sds = _sds_tree(adamw_init, params_sds)
+            from repro.train.optimizer import opt_specs
+            o_shardings = rt.tree_sharding(opt_specs(pspecs))
+            jitted = jax.jit(step,
+                             in_shardings=(p_shardings, o_shardings,
+                                           b_shardings, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_sds, opt_sds, batch_sds, key_sds)
+        elif sh.kind == "prefill":
+            sc = ServeConfig(batch=sh.global_batch, max_len=sh.seq_len)
+            step = make_prefill_step(cfg, rt, sc)
+            jitted = jax.jit(step, in_shardings=(p_shardings, b_shardings))
+            lowered = jitted.lower(params_sds, batch_sds)
+        else:  # decode
+            sc = ServeConfig(batch=sh.global_batch, max_len=sh.seq_len)
+            step = make_decode_step(cfg, rt, sc)
+            cache_sds = _sds_tree(
+                functools.partial(model_mod.init_cache, cfg, rt,
+                                  sh.global_batch, sh.seq_len))
+            c_shardings = rt.tree_sharding(
+                model_mod.cache_specs(cfg, rt, sh.global_batch, sh.seq_len))
+            tok_sds = batch_sds[next(iter(batch_sds))]
+            tok_sharding = b_shardings[next(iter(b_shardings))]
+            jitted = jax.jit(step,
+                             in_shardings=(p_shardings, c_shardings,
+                                           tok_sharding),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_sds, cache_sds, tok_sds)
+        compiled = lowered.compile()
+    tokens = sh.global_batch * (sh.seq_len if sh.kind in ("train", "prefill")
+                                else 1)
+    meta = {"arch": arch, "shape": shape,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "n_devices": 512 if multi_pod else 256,
+            "kind": sh.kind,
+            "tokens_global": tokens,
+            "param_count": cfg.param_count(),
+            "active_param_count": cfg.active_param_count()}
+    return lowered, compiled, meta
+
+
+def analyse(lowered, compiled, meta) -> Dict[str, Any]:
+    from repro.launch.hlo_analysis import HW
+    from repro.launch.hlo_cost import module_cost
+
+    raw_cost = compiled.cost_analysis()
+    if isinstance(raw_cost, (list, tuple)):
+        raw_cost = raw_cost[0]
+    raw_cost = {k: float(v) for k, v in raw_cost.items()
+                if isinstance(v, (int, float)) and k in
+                ("flops", "bytes accessed", "transcendentals")}
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes", "host_argument_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            mem_d[attr] = int(v)
+    hlo = compiled.as_text()
+    mc = module_cost(hlo)                      # loop-aware, per device
+    hw = HW()
+    t_c = mc.flops / hw.peak_flops
+    t_m = mc.bytes_ideal / hw.hbm_bw          # TPU-projected HBM traffic
+    t_m_raw = mc.bytes_accessed / hw.hbm_bw   # as-compiled (XLA:CPU fusion)
+    t_n = mc.coll_bytes.get("total", 0.0) / hw.link_bw
+    dominant = {t_c: "compute", t_m: "memory", t_n: "collective"}[
+        max(t_c, t_m, t_n)]
+    # MODEL_FLOPS (6·N_active·D train, 2·N_active·D forward) vs HLO flops
+    tokens = meta["tokens_global"]
+    n_act = meta["active_param_count"]
+    mf = (6.0 if meta["kind"] == "train" else 2.0) * n_act * tokens
+    hlo_global = mc.flops * meta["n_devices"]
+    roof = {
+        "compute_s": t_c, "memory_s": t_m, "memory_s_ascompiled": t_m_raw,
+        "collective_s": t_n,
+        "dominant": dominant,
+        "flops_per_device": mc.flops,
+        "hbm_bytes_per_device": mc.bytes_ideal,
+        "hbm_bytes_ascompiled": mc.bytes_accessed,
+        "wire_bytes_per_device": mc.coll_bytes.get("total", 0.0),
+        "model_flops_global": mf,
+        "useful_flops_ratio": mf / hlo_global if hlo_global else 0.0,
+        "unknown_trip_counts": mc.unknown_trip_counts,
+    }
+    live = mem_d.get("argument_size_in_bytes", 0) + \
+        mem_d.get("temp_size_in_bytes", 0)
+    return {**meta, "xla_cost_analysis": raw_cost, "memory": mem_d,
+            "collectives": mc.coll_bytes, "roofline": roof,
+            "live_bytes_per_device": live,
+            "hlo_len": len(hlo)}
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, args,
+             out_dir: str) -> Dict[str, Any]:
+    tag = f"-{args.tag}" if args.tag else ""
+    name = f"{arch}_{shape}_{'multi' if multi_pod else 'single'}{tag}.json"
+    path = os.path.join(out_dir, name)
+    if os.path.exists(path) and not args.force:
+        print(f"[skip] {name}")
+        with open(path) as f:
+            return json.load(f)
+    t0 = time.time()
+    print(f"[cell] {arch} × {shape} × {'2x16x16' if multi_pod else '16x16'} "
+          f"…", flush=True)
+    lowered, compiled, meta = lower_cell(arch, shape, multi_pod, args)
+    rec = analyse(lowered, compiled, meta)
+    rec["compile_s"] = time.time() - t0
+    r = rec["roofline"]
+    print(f"   compute={r['compute_s']*1e3:8.2f}ms memory="
+          f"{r['memory_s']*1e3:8.2f}ms collective={r['collective_s']*1e3:8.2f}ms"
+          f" dominant={r['dominant']}"
+          f" live={rec['live_bytes_per_device']/2**30:.2f}GiB"
+          f" ({rec['compile_s']:.0f}s)", flush=True)
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    # hillclimb knobs
+    ap.add_argument("--moe-mode", default="tp", choices=["tp", "ep"])
+    ap.add_argument("--collective-dtype", default="bfloat16")
+    ap.add_argument("--remat", default="")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--fsdp-only", action="store_true",
+                    help="pure-FSDP layout: 'model' axis becomes data")
+    ap.add_argument("--sequence-parallel", action="store_true")
+    ap.add_argument("--no-seq-sharded-decode", action="store_true")
+    args = ap.parse_args()
+
+    from repro import configs
+
+    failures = []
+    if args.all:
+        meshes = [False, True]
+        if args.multi_pod_only:
+            meshes = [True]
+        if args.single_pod_only:
+            meshes = [False]
+        for arch in configs.ARCHS:
+            for shape in configs.SHAPES:
+                ok, why = configs.applicable(arch, shape)
+                if not ok:
+                    print(f"[n/a ] {arch} × {shape}: {why}")
+                    continue
+                for mp in meshes:
+                    try:
+                        run_cell(arch, shape, mp, args, args.out)
+                    except Exception as e:
+                        failures.append((arch, shape, mp, repr(e)))
+                        print(f"[FAIL] {arch} × {shape} × "
+                              f"{'multi' if mp else 'single'}: {e!r}",
+                              flush=True)
+                        traceback.print_exc()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        run_cell(args.arch, args.shape, args.multi_pod, args, args.out)
+
+    if failures:
+        print(f"\n{len(failures)} FAILED CELLS:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nall requested cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

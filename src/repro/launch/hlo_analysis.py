@@ -1,0 +1,130 @@
+"""Parse compiled HLO for collective traffic + roofline terms.
+
+``collective_bytes`` scans post-optimization HLO text for
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops, extracts output shapes and replica-group sizes, and converts to *wire
+bytes per device* with the standard ring-algorithm factors:
+
+  all-reduce       2 (g-1)/g * payload        (payload = full operand)
+  all-gather       (g-1)/g   * output
+  reduce-scatter   (g-1)     * output         (= (g-1)/g * input)
+  all-to-all       (g-1)/g   * payload
+  collective-permute         * payload
+
+The flat collective roofline term is wire_bytes / link_bw; dist.fabric
+refines it with the modelled cluster topology (per-link bottleneck under
+ECMP vs FatPaths routing).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["CollectiveOp", "parse_collectives", "collective_bytes",
+           "roofline_terms", "HW"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# e.g.  %all-reduce.5 = bf16[1024,512]{1,0} all-reduce(...), replica_groups=...
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_TUPLE_ELEM_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SRCTGT_RE = re.compile(r"source_target_pairs=\{\{")
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    out_bytes: int          # bytes of the (tuple-summed) output shape
+    group_size: int
+
+    @property
+    def wire_bytes(self) -> float:
+        g = max(self.group_size, 1)
+        if self.kind == "all-reduce":
+            return 2.0 * (g - 1) / g * self.out_bytes
+        if self.kind == "all-gather":
+            return (g - 1) / g * self.out_bytes
+        if self.kind == "reduce-scatter":
+            return float(g - 1) * self.out_bytes
+        if self.kind == "all-to-all":
+            return (g - 1) / g * self.out_bytes
+        return float(self.out_bytes)          # collective-permute
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype, 4)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * b
+
+
+def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
+    ops: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        tuple_body, dtype, dims, kind = m.groups()
+        if tuple_body is not None:
+            out_b = sum(_shape_bytes(t, d)
+                        for t, d in _TUPLE_ELEM_RE.findall(tuple_body))
+        else:
+            out_b = _shape_bytes(dtype, dims)
+        g = 1
+        mg = _GROUPS_RE.search(line)
+        if mg:
+            g = len(mg.group(1).split(","))
+        else:
+            mi = _GROUPS_IOTA_RE.search(line)
+            if mi:
+                g = int(mi.group(2))
+            elif kind == "collective-permute":
+                g = 2
+        ops.append(CollectiveOp(kind=kind, out_bytes=out_b, group_size=g))
+    return ops
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Aggregate wire bytes (per device) by collective kind."""
+    agg: Dict[str, float] = {}
+    for op in parse_collectives(hlo_text):
+        agg[op.kind] = agg.get(op.kind, 0.0) + op.wire_bytes
+        agg["total"] = agg.get("total", 0.0) + op.wire_bytes
+    return agg
+
+
+# TPU v5e-class hardware constants (task spec)
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12       # bf16 / chip
+    hbm_bw: float = 819e9            # bytes/s / chip
+    link_bw: float = 50e9            # bytes/s / ICI link
+    hbm_bytes: float = 16e9          # capacity (context)
+
+
+def roofline_terms(cost: Dict[str, float], coll: Dict[str, float],
+                   hw: HW = HW()) -> Dict[str, float]:
+    """Three roofline terms in seconds from per-device cost analysis."""
+    flops = float(cost.get("flops", 0.0))
+    bytes_hbm = float(cost.get("bytes accessed", 0.0))
+    wire = float(coll.get("total", 0.0))
+    t_c = flops / hw.peak_flops
+    t_m = bytes_hbm / hw.hbm_bw
+    t_n = wire / hw.link_bw
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_n, "collective"))[1]
+    return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+            "dominant": dom,
+            "flops": flops, "hbm_bytes": bytes_hbm, "wire_bytes": wire}

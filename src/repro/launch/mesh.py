@@ -1,0 +1,76 @@
+"""Production mesh construction (multi-pod dry-run spec).
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import and then calls it.
+
+FatPaths integration: ``fatpaths_device_order`` reorders devices so that
+mesh neighbours (ring-collective peers) land on fabric-adjacent endpoints
+of the modelled cluster topology — the paper's "routing-aware" placement
+applied to collective scheduling (see repro.dist.fabric).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str],
+              device_order: Optional[np.ndarray] = None):
+    """General mesh over the first prod(shape) local devices; optional
+    explicit device permutation (fabric-aware placement)."""
+    import jax
+    from jax.sharding import Mesh
+
+    n = int(np.prod(shape))
+    devs = np.array(jax.devices()[:n])
+    if device_order is not None:
+        devs = devs[np.asarray(device_order)[:n]]
+    return Mesh(devs.reshape(tuple(shape)), tuple(axes))
+
+
+def fatpaths_device_order(n_devices: int, topo=None, seed: int = 0) -> np.ndarray:
+    """Order devices so consecutive mesh coordinates sit on fabric-adjacent
+    endpoints: BFS order over the cluster topology's routers (endpoints of a
+    router stay contiguous).  Identity when no topology is given."""
+    if topo is None:
+        return np.arange(n_devices)
+    from ..core import paths as paths_mod
+    import jax.numpy as jnp
+
+    adj = topo.adj
+    n_r = adj.shape[0]
+    # BFS from router 0 for a locality-preserving linearisation.
+    order = []
+    seen = np.zeros(n_r, dtype=bool)
+    stack = [0]
+    seen[0] = True
+    while stack:
+        v = stack.pop(0)
+        order.append(v)
+        for u in np.nonzero(adj[v])[0]:
+            if not seen[u]:
+                seen[u] = True
+                stack.append(u)
+    order += [i for i in range(n_r) if not seen[i]]
+    ep_order = []
+    conc = topo.concentration
+    base = np.concatenate([[0], np.cumsum(conc)[:-1]])
+    for r in order:
+        ep_order.extend(range(int(base[r]), int(base[r] + conc[r])))
+    ep_order = np.array(ep_order)
+    if len(ep_order) < n_devices:
+        reps = -(-n_devices // len(ep_order))
+        ep_order = np.concatenate([ep_order + i * len(ep_order) for i in range(reps)])
+    return ep_order[:n_devices] % n_devices

@@ -1,0 +1,164 @@
+"""Roofline report: aggregate dry-run JSONs into the §Roofline table.
+
+Per (arch × shape × mesh) cell:
+  compute / memory / collective terms (s), dominant term, MODEL_FLOPS,
+  useful-flops ratio, live bytes per device vs HBM, and — via the fabric
+  model — the collective term re-evaluated on a modelled cluster topology
+  under ECMP vs FatPaths routing (the paper's contribution applied to this
+  system's own traffic).
+
+Usage:
+  python -m repro.launch.roofline --dir experiments/dryrun [--fabric sf:11]
+  python -m repro.launch.roofline --dir experiments/dryrun --markdown
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from .hlo_analysis import HW
+
+
+def load_cells(dir_: str, tag: str = "") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        parts = base.split("_")
+        is_tagged = parts[-1] not in ("single", "multi")
+        if tag:
+            if not base.endswith("-" + tag) and not base.endswith("_" + tag):
+                continue
+        elif is_tagged:
+            continue
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+_FABRIC_CACHE: Dict[str, object] = {}
+
+
+def _advice(cell: Dict) -> str:
+    """One sentence: what moves this cell's dominant term down."""
+    dom = cell["roofline"]["dominant"]
+    kind = cell["kind"]
+    fam = cell["arch"].split("-")[0]
+    if dom == "collective":
+        if cell["arch"] in ("deepseek-v2-236b", "olmoe-1b-7b"):
+            return ("EP a2a + param AGs dominate: larger per-device batch "
+                    "or FatPaths-routed fabric (1.9x on a2a)")
+        if kind == "train":
+            return ("TP activation all-reduces: pure-FSDP relayout "
+                    "(gemma2: 4.1x) or fewer TP ways")
+        return "SP boundary gathers: longer seq chunks amortise"
+    if dom == "memory":
+        if kind == "decode":
+            return "KV/state reads are the floor; quantise cache below bf16"
+        return "attention/expert HBM traffic: larger fused blocks (Pallas)"
+    return "compute-bound: already near MXU roofline; check useful-flops"
+
+
+def fabric_collective_term(cell: Dict, fabric_spec: str = "sf:11",
+                           n_rings: int = 1) -> Dict[str, float]:
+    """Re-evaluate the cell's collective traffic on a modelled fabric."""
+    from ..core.topology import by_name
+    from ..dist.fabric import ClusterFabric
+
+    if fabric_spec not in _FABRIC_CACHE:
+        _FABRIC_CACHE[fabric_spec] = ClusterFabric(
+            by_name(fabric_spec), n_layers=9, rho=0.6)
+    fb = _FABRIC_CACHE[fabric_spec]
+    topo = fb.topo
+    n = cell["n_devices"]
+    out = {}
+    for scheme in ("ecmp", "fatpaths"):
+        t = 0.0
+        for kind, wire in cell.get("collectives", {}).items():
+            if kind == "total" or wire <= 0:
+                continue
+            # wire bytes/device -> payload/device for the fabric flows
+            rep = fb.collective_time(kind, min(n, topo.n_endpoints), wire,
+                                     scheme=scheme)
+            t += rep.time_s
+        out[scheme] = t
+    return out
+
+
+def row(cell: Dict) -> Dict:
+    r = cell["roofline"]
+    hw = HW()
+    terms = {"compute": r["compute_s"], "memory": r["memory_s"],
+             "collective": r["collective_s"]}
+    bound = max(terms.values())
+    # roofline fraction: useful model compute time / bound step time
+    t_model = (r["model_flops_global"] / cell["n_devices"]) / hw.peak_flops
+    frac = t_model / bound if bound > 0 else 0.0
+    return {
+        "arch": cell["arch"], "shape": cell["shape"], "mesh": cell["mesh"],
+        "kind": cell["kind"],
+        "compute_ms": r["compute_s"] * 1e3,
+        "memory_ms": r["memory_s"] * 1e3,
+        "collective_ms": r["collective_s"] * 1e3,
+        "dominant": r["dominant"],
+        "model_tflops_global": r["model_flops_global"] / 1e12,
+        "useful_flops_ratio": r["useful_flops_ratio"],
+        "roofline_frac": frac,
+        "live_GiB": cell["live_bytes_per_device"] / 2 ** 30,
+        "fits_hbm": cell["live_bytes_per_device"] <= hw.hbm_bytes,
+        "compile_s": cell.get("compile_s", 0.0),
+        "advice": _advice(cell),
+    }
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    fab = any("fabric_ecmp_ms" in r for r in rows)
+    hdr = ("| arch | shape | mesh | dom | compute ms | memory ms | "
+           "coll ms | roofline frac | useful flops | live GiB | fits |"
+           + (" fabric ecmp/fp ms |" if fab else "")
+           + " next lever |")
+    sep = "|" + "---|" * (12 + (1 if fab else 0))
+    lines = [hdr, sep]
+    for r in rows:
+        fabcol = (f" {r.get('fabric_ecmp_ms', 0):.0f}/"
+                  f"{r.get('fabric_fatpaths_ms', 0):.0f} |" if fab else "")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['dominant'][:4]}"
+            f" | {r['compute_ms']:.1f} | {r['memory_ms']:.1f}"
+            f" | {r['collective_ms']:.1f} | {r['roofline_frac']:.2f}"
+            f" | {r['useful_flops_ratio']:.2f} | {r['live_GiB']:.2f}"
+            f" | {'Y' if r['fits_hbm'] else 'N'} |{fabcol}"
+            f" {r['advice']} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--fabric", default="")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    cells = load_cells(args.dir, args.tag)
+    rows = [row(c) for c in cells]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    if args.fabric:
+        for c, r in zip(sorted(cells, key=lambda c: (c["arch"], c["shape"],
+                                                     c["mesh"])), rows):
+            fc = fabric_collective_term(c, args.fabric)
+            r["fabric_ecmp_ms"] = fc["ecmp"] * 1e3
+            r["fabric_fatpaths_ms"] = fc["fatpaths"] * 1e3
+    text = markdown_table(rows) if args.markdown else json.dumps(rows, indent=1)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""Shared model components: norms, RoPE (+M-RoPE), MLPs, embeddings, init.
+
+Parameters are plain nested dicts of jnp arrays; every init function has a
+twin ``*_specs`` builder returning the matching PartitionSpec tree (tests
+assert the trees are structurally identical).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.sharding import Runtime
+
+Init = jax.nn.initializers
+
+
+def truncnorm(key, shape, dtype, scale: float = 0.02):
+    return Init.truncated_normal(stddev=scale)(key, shape, dtype)
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---- RMSNorm -----------------------------------------------------------------
+def rmsnorm_init(key, d: int, dtype=jnp.float32):
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rmsnorm_specs(rt: Runtime):
+    return {"scale": rt.spec(None)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+# ---- RoPE --------------------------------------------------------------------
+def rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               sections: Optional[Tuple[int, int, int]] = None) -> jnp.ndarray:
+    """Rotate (B, S, H, D) by positions.
+
+    positions: (B, S) for standard RoPE, or (3, B, S) for M-RoPE
+    (qwen2-vl temporal/height/width sections of the half-dim).
+    """
+    b, s, h, d = x.shape
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    if sections is None:
+        ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,d/2)
+    else:
+        assert positions.ndim == 3, "M-RoPE needs (3, B, S) positions"
+        parts = []
+        start = 0
+        for sec, pos in zip(sections, positions):
+            parts.append(pos[..., None].astype(jnp.float32) * freqs[start:start + sec])
+            start += sec
+        ang = jnp.concatenate(parts, axis=-1)          # (B,S,d/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---- Gated MLP (SwiGLU / GeGLU) ----------------------------------------------
+def mlp_init(key, d: int, f: int, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": truncnorm(k1, (d, 2, f), dtype),    # [gate; up] fused
+        "wo": truncnorm(k2, (f, d), dtype, scale=0.02 / np.sqrt(2)),
+    }
+
+
+def mlp_specs(rt: Runtime, d: int, f: int):
+    return {"wi": rt.spec_div(("fsdp", None, "tp"), (d, 2, f)),
+            "wo": rt.spec_div(("tp", "fsdp"), (f, d))}
+
+
+def mlp_apply(params, x, act: str = "silu"):
+    dt = x.dtype
+    h = jnp.einsum("bsd,dcf->bscf", x, params["wi"].astype(dt))
+    gate, up = h[:, :, 0], h[:, :, 1]
+    g = jax.nn.silu(gate) if act == "silu" else jax.nn.gelu(gate, approximate=True)
+    return jnp.einsum("bsf,fd->bsd", g * up, params["wo"].astype(dt))
+
+
+@jax.custom_vjp
+def _cast_grad_bf16(x):
+    return x
+
+
+def _cgb_fwd(x):
+    return x, None
+
+
+def _cgb_bwd(_, g):
+    return (g.astype(jnp.bfloat16),)
+
+
+_cast_grad_bf16.defvjp(_cgb_fwd, _cgb_bwd)
+
+
+def cast_cotangent_bf16(x):
+    """Identity whose backward casts the cotangent to bf16.
+
+    Placed at the logits: the loss math stays f32, but the gradient flowing
+    back through the layer stack is bf16 — halves backward HBM traffic and
+    wire bytes (the f32 cotangent otherwise contaminates every residual add
+    all the way down; measured in EXPERIMENTS.md §Perf).
+    """
+    return _cast_grad_bf16(x)
+
+
+# ---- Embedding / unembedding ---------------------------------------------------
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"tok": truncnorm(key, (vocab, d), dtype)}
+
+
+def embed_specs(rt: Runtime, vocab: int, d: int):
+    if rt.tp_size > 1:
+        return {"tok": rt.spec_div(("tp", "fsdp"), (vocab, d))}
+    # pure-FSDP: shard d (a vocab-sharded table forces XLA to all-gather
+    # the full f32 table for the row gather — measured 4.4 GiB at 256k
+    # vocab; with d sharded the row gather is shard-local)
+    return {"tok": rt.spec_div((None, "fsdp"), (vocab, d))}
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  softcap: float = 0.0) -> jnp.ndarray:
+    """Mean token cross-entropy in f32 (with optional final logit softcap)."""
+    lf = logits.astype(jnp.float32)
+    if softcap > 0:
+        lf = softcap * jnp.tanh(lf / softcap)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

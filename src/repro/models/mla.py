@@ -1,0 +1,211 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Faithful structure:
+  * q: low-rank  x -> W_DQ (q_lora) -> norm -> W_UQ -> per-head [nope|rope]
+  * kv: latent   x -> W_DKV (kv_lora) -> norm  (cached!)
+                 latent -> W_UKV -> per-head [k_nope | v]
+  * shared rope key: x -> W_KR (rope_dim), RoPE'd, shared across heads.
+
+Train/prefill expands k/v from the latent (chunked attention).  Decode uses
+the *absorbed* form: q_nope is folded through W_UK so attention logits and
+values are computed directly against the compressed latent cache — the
+cache stays (B, S, kv_lora + rope_dim), the paper-accurate memory win.
+The latent cache is sequence-sharded over the model axis with LSE combine,
+like the GQA decode path.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.sharding import P, Runtime
+from . import common
+from .attention import NEG_INF, chunked_attention, flash_chunked
+from .config import ModelConfig
+
+
+def mla_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "wdq": common.truncnorm(ks[0], (d, m.q_lora), dtype),
+        "q_ln": common.rmsnorm_init(ks[1], m.q_lora, dtype),
+        "wuq": common.truncnorm(ks[1], (m.q_lora, h, m.nope_dim + m.rope_dim), dtype),
+        "wdkv": common.truncnorm(ks[2], (d, m.kv_lora), dtype),
+        "kv_ln": common.rmsnorm_init(ks[3], m.kv_lora, dtype),
+        "wukv": common.truncnorm(ks[4], (m.kv_lora, h, m.nope_dim + m.v_dim), dtype),
+        "wkr": common.truncnorm(ks[5], (d, m.rope_dim), dtype),
+        "wo": common.truncnorm(ks[6], (h, m.v_dim, d), dtype,
+                               scale=0.02 / np.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def mla_specs(rt: Runtime, cfg: ModelConfig):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    return {
+        "wdq": rt.spec_div(("fsdp", "tp"), (d, m.q_lora)),
+        "q_ln": common.rmsnorm_specs(rt),
+        "wuq": rt.spec_div(("fsdp", "tp", None), (m.q_lora, h, m.nope_dim + m.rope_dim)),
+        "wdkv": rt.spec_div(("fsdp", None), (d, m.kv_lora)),
+        "kv_ln": common.rmsnorm_specs(rt),
+        "wukv": rt.spec_div(("fsdp", "tp", None), (m.kv_lora, h, m.nope_dim + m.v_dim)),
+        "wkr": rt.spec_div(("fsdp", None), (d, m.rope_dim)),
+        "wo": rt.spec_div(("tp", None, "fsdp"), (h, m.v_dim, d)),
+    }
+
+
+def mla_apply(params, cfg: ModelConfig, rt: Runtime, x, positions, *,
+              cache: Optional[dict] = None, chunk: int = 512,
+              block_skip: bool = False):
+    """x: (B, S, D) -> (out, new_cache)."""
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dt = x.dtype
+
+    cq = common.rmsnorm(params["q_ln"], jnp.einsum("bsd,dr->bsr", x,
+                                                   params["wdq"].astype(dt)),
+                        cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["wuq"].astype(dt))
+    q_nope, q_rope = q[..., :m.nope_dim], q[..., m.nope_dim:]
+    q_rope = common.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    latent = common.rmsnorm(params["kv_ln"],
+                            jnp.einsum("bsd,dr->bsr", x, params["wdkv"].astype(dt)),
+                            cfg.norm_eps)
+    k_rope = common.apply_rope(
+        jnp.einsum("bsd,dr->bsr", x, params["wkr"].astype(dt))[:, :, None, :],
+        positions, cfg.rope_theta)[:, :, 0]            # (B, S, rope_dim)
+
+    scale = float(m.nope_dim + m.rope_dim) ** -0.5
+
+    if cache is not None and s == 1:
+        out, new_cache = _mla_decode(params, cfg, rt, q_nope, q_rope, latent,
+                                     k_rope, cache, scale)
+        o = jnp.einsum("bshv,hvd->bsd", out, params["wo"].astype(dt))
+        return o, new_cache
+
+    # Train/prefill: expand k/v from latent, run chunked attention.
+    kv = jnp.einsum("bsr,rhk->bshk", latent, params["wukv"].astype(dt))
+    k_nope, v = kv[..., :m.nope_dim], kv[..., m.nope_dim:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, m.rope_dim))],
+        axis=-1)
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+    qh = rt.shard(qfull.transpose(0, 2, 1, 3), "fsdp", "tp", None, None)
+    # pin k/v (and hence the flash-VJP residuals) to head-sharded layout
+    kh = rt.shard_spec(k.transpose(0, 2, 1, 3),
+                       rt.spec_div(("fsdp", "tp", None, None),
+                                   (b, h, s, m.nope_dim + m.rope_dim)))
+    vh = rt.shard_spec(v.transpose(0, 2, 1, 3),
+                       rt.spec_div(("fsdp", "tp", None, None),
+                                   (b, h, s, m.v_dim)))
+    if kh.shape[2] > chunk:
+        out = flash_chunked(qh, kh, vh, cfg.causal, 0, cfg.attn_softcap,
+                            scale, chunk, 0)
+    else:
+        out = chunked_attention(qh, kh, vh, causal=cfg.causal, window=0,
+                                softcap=cfg.attn_softcap, scale=scale,
+                                chunk=chunk, block_skip=block_skip)
+    o = jnp.einsum("bhsv,hvd->bsd", out, params["wo"].astype(dt))
+    new_cache = None
+    if cache is not None:
+        l = cache["latent"].shape[1]
+        lat = jnp.concatenate([latent, k_rope], axis=-1)
+        new_cache = {
+            "latent": cache["latent"].at[:, :min(s, l)].set(
+                lat[:, :min(s, l)].astype(cache["latent"].dtype)),
+            "pos": jnp.asarray(s, jnp.int32),
+        }
+    return o, new_cache
+
+
+def init_mla_cache(rt: Runtime, cfg: ModelConfig, batch: int, length: int,
+                   dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {"latent": jnp.zeros((batch, length, m.kv_lora + m.rope_dim), dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def mla_cache_specs(rt: Runtime, cfg: ModelConfig, batch: int, length: int):
+    m = cfg.mla
+    seq_entry = "tp" if rt.seq_sharded_decode else None
+    return {"latent": rt.spec_div(("fsdp", seq_entry, None),
+                                  (batch, length, m.kv_lora + m.rope_dim)),
+            "pos": P()}
+
+
+def _mla_decode(params, cfg: ModelConfig, rt: Runtime, q_nope, q_rope, latent,
+                k_rope, cache, scale):
+    """Absorbed decode against the sequence-sharded latent cache.
+
+    q_abs[h] = q_nope[h] @ W_UK[h]^T  (fold key up-projection into q), so
+      logits = q_abs . latent + q_rope . k_rope_cache
+      o_lat  = softmax(logits) @ latent        (kv_lora dims)
+      o[h]   = o_lat @ W_UV[h]                 (v_dim dims)
+    """
+    m = cfg.mla
+    b = q_nope.shape[0]
+    h = cfg.n_heads
+    dt = q_nope.dtype
+    wuk = params["wukv"][..., :m.nope_dim].astype(dt)   # (r, h, nope)
+    wuv = params["wukv"][..., m.nope_dim:].astype(dt)   # (r, h, v)
+    # absorb: q_abs (B, 1, H, r)
+    q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, wuk)
+    new_entry = jnp.concatenate([latent, k_rope], axis=-1)  # (B, 1, r+rope)
+    pos = cache["pos"]
+    lcache = cache["latent"]
+    l = lcache.shape[1]
+
+    def body(qa, qr, new_, lc, pos_):
+        ax = rt.model_axis
+        l_loc = lc.shape[1]
+        shard = (jax.lax.axis_index(ax)
+                 if rt.mesh is not None and rt.tp_size > 1
+                 and rt.seq_sharded_decode else 0)
+        start = shard * l_loc
+        local_idx = jnp.clip(pos_ - start, 0, l_loc - 1)
+        owns = (pos_ >= start) & (pos_ < start + l_loc)
+        lc = jnp.where(owns, jax.lax.dynamic_update_slice_in_dim(
+            lc, new_.astype(lc.dtype), local_idx, axis=1), lc)
+        lat_c = lc[..., :m.kv_lora].astype(jnp.float32)     # (B, Lc, r)
+        kr_c = lc[..., m.kv_lora:].astype(jnp.float32)      # (B, Lc, rope)
+        s1 = jnp.einsum("bshr,bkr->bhsk", qa.astype(jnp.float32), lat_c)
+        s2 = jnp.einsum("bshr,bkr->bhsk", qr.astype(jnp.float32), kr_c)
+        s = (s1 + s2) * scale
+        kpos = start + jnp.arange(l_loc)
+        written = kpos[None, None, None, :] <= pos_
+        s = jnp.where(written, s, NEG_INF)
+        mx = jnp.max(s, axis=-1, keepdims=True)
+        mx_safe = jnp.where(jnp.isfinite(mx), mx, 0.0)
+        p = jnp.where(jnp.isfinite(s), jnp.exp(s - mx_safe), 0.0)
+        lsum = p.sum(axis=-1, keepdims=True)
+        o_lat = jnp.einsum("bhsk,bkr->bhsr", p, lat_c)
+        if rt.mesh is not None and rt.tp_size > 1 \
+                and rt.seq_sharded_decode:
+            gm = jax.lax.pmax(mx, ax)
+            w = jnp.where(jnp.isfinite(mx), jnp.exp(mx - gm), 0.0)
+            o_lat = jax.lax.psum(o_lat * w, ax)
+            lsum = jax.lax.psum(lsum * w, ax)
+        o_lat = o_lat / jnp.where(lsum == 0, 1.0, lsum)
+        return o_lat.astype(qa.dtype), lc
+
+    if rt.mesh is not None and rt.tp_size > 1 and rt.seq_sharded_decode:
+        fs = rt.fsdp
+        cache_spec = P(fs, rt.tp, None)
+        rep = P(fs, None, None, None)
+        rep3 = P(fs, None, None)
+        body_m = rt.shard_map(
+            body, in_specs=(rep, rep, rep3, cache_spec, P()),
+            out_specs=(rep, cache_spec))
+    else:
+        body_m = body
+    o_lat, lc = body_m(q_abs, q_rope, new_entry, lcache, pos)
+    out = jnp.einsum("bhsr,rhv->bshv", o_lat, wuv)
+    return out, {"latent": lc, "pos": pos + 1}

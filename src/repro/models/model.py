@@ -1,0 +1,401 @@
+"""Unified model assembly for all assigned architectures.
+
+The layer stack is ``cfg.pattern_repeats`` repetitions of the
+``cfg.layer_pattern`` unit, executed as a single ``jax.lax.scan`` over
+stacked per-repeat parameters (bounded HLO size at 40-60 layers — essential
+for 512-device dry-run compiles).  Heterogeneous units (gemma2 "lg",
+zamba2 "mmmmma") apply each unit position in sequence inside the scan body;
+the 'a' (shared attention) weights live *outside* the scan and are reused
+by every repeat (zamba2 semantics), while its KV caches stay per-repeat.
+
+Public API:
+  init_params / param_specs / init_cache / cache_specs
+  forward(params, cfg, rt, batch, cache=None)  -> logits (+ new cache)
+  loss_fn(params, cfg, rt, batch)              -> (loss, metrics)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import P, Runtime
+from . import attention as attn_mod
+from . import common, mla, moe, rwkv, ssm
+from .config import ModelConfig
+
+AUX_COEF = 0.01
+
+
+# -----------------------------------------------------------------------------
+# Per-unit-position block init/specs.
+# -----------------------------------------------------------------------------
+def _block_init(key, cfg: ModelConfig, char: str, dtype):
+    ks = jax.random.split(key, 4)
+    if char in ("g", "l"):
+        p = {"ln1": common.rmsnorm_init(ks[0], cfg.d_model, dtype),
+             "ln2": common.rmsnorm_init(ks[1], cfg.d_model, dtype)}
+        if cfg.mla is not None:
+            p["attn"] = mla.mla_init(ks[2], cfg, dtype)
+        else:
+            p["attn"] = attn_mod.attn_init(ks[2], cfg, dtype)
+        if cfg.moe is not None:
+            p["moe"] = moe.moe_init(ks[3], cfg, dtype)
+        else:
+            p["mlp"] = common.mlp_init(ks[3], cfg.d_model, cfg.d_ff, dtype)
+        if cfg.post_norms:
+            p["ln1_post"] = common.rmsnorm_init(ks[0], cfg.d_model, dtype)
+            p["ln2_post"] = common.rmsnorm_init(ks[1], cfg.d_model, dtype)
+        return p
+    if char == "a":
+        return {}  # shared weights live outside the scan
+    if char == "m":
+        return {"ln1": common.rmsnorm_init(ks[0], cfg.d_model, dtype),
+                "ssm": ssm.ssm_init(ks[1], cfg, dtype)}
+    if char == "r":
+        return {"ln1": common.rmsnorm_init(ks[0], cfg.d_model, dtype),
+                "ln2": common.rmsnorm_init(ks[1], cfg.d_model, dtype),
+                "rwkv": rwkv.rwkv_init(ks[2], cfg, dtype)}
+    raise ValueError(char)
+
+
+def _block_specs(rt: Runtime, cfg: ModelConfig, char: str):
+    if char in ("g", "l"):
+        s = {"ln1": common.rmsnorm_specs(rt), "ln2": common.rmsnorm_specs(rt)}
+        s["attn"] = (mla.mla_specs(rt, cfg) if cfg.mla is not None
+                     else attn_mod.attn_specs(rt, cfg))
+        if cfg.moe is not None:
+            s["moe"] = moe.moe_specs(rt, cfg)
+        else:
+            s["mlp"] = common.mlp_specs(rt, cfg.d_model, cfg.d_ff)
+        if cfg.post_norms:
+            s["ln1_post"] = common.rmsnorm_specs(rt)
+            s["ln2_post"] = common.rmsnorm_specs(rt)
+        return s
+    if char == "a":
+        return {}
+    if char == "m":
+        return {"ln1": common.rmsnorm_specs(rt), "ssm": ssm.ssm_specs(rt, cfg)}
+    if char == "r":
+        return {"ln1": common.rmsnorm_specs(rt), "ln2": common.rmsnorm_specs(rt),
+                "rwkv": rwkv.rwkv_specs(rt, cfg)}
+    raise ValueError(char)
+
+
+def _shared_block_init(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    return {"ln1": common.rmsnorm_init(ks[0], cfg.d_model, dtype),
+            "attn": attn_mod.attn_init(ks[1], cfg, dtype),
+            "ln2": common.rmsnorm_init(ks[2], cfg.d_model, dtype),
+            "mlp": common.mlp_init(ks[3], cfg.d_model, cfg.d_ff, dtype)}
+
+
+def _shared_block_specs(rt: Runtime, cfg: ModelConfig):
+    return {"ln1": common.rmsnorm_specs(rt),
+            "attn": attn_mod.attn_specs(rt, cfg),
+            "ln2": common.rmsnorm_specs(rt),
+            "mlp": common.mlp_specs(rt, cfg.d_model, cfg.d_ff)}
+
+
+# -----------------------------------------------------------------------------
+# Model-level init / specs.
+# -----------------------------------------------------------------------------
+def init_params(cfg: ModelConfig, rt: Runtime, key) -> Dict[str, Any]:
+    dtype = common.dtype_of(cfg.param_dtype)
+    keys = jax.random.split(key, len(cfg.layer_pattern) + 4)
+    params: Dict[str, Any] = {}
+    if cfg.frontend is None:
+        params["embed"] = common.embed_init(keys[0], cfg.vocab, cfg.d_model, dtype)
+    elif cfg.frontend == "vision":
+        # VLM: patch embeddings come from the (stubbed) vision tower, text
+        # tokens from the embedding table; input_specs supplies fused embeds.
+        params["frontend"] = {
+            "proj": common.truncnorm(keys[0], (cfg.frontend_dim, cfg.d_model), dtype)}
+        params["embed"] = common.embed_init(keys[-4], cfg.vocab, cfg.d_model, dtype)
+    else:  # audio encoder: frame embeddings only
+        params["frontend"] = {
+            "proj": common.truncnorm(keys[0], (cfg.frontend_dim, cfg.d_model), dtype)}
+
+    blocks = {}
+    r = cfg.pattern_repeats
+    for i, ch in enumerate(cfg.layer_pattern):
+        ki = jax.random.split(keys[i + 1], r)
+        stacked = jax.vmap(lambda k: _block_init(k, cfg, ch, dtype))(ki)
+        blocks[str(i)] = stacked
+    params["blocks"] = blocks
+    if "a" in cfg.layer_pattern:
+        params["shared_attn"] = _shared_block_init(keys[-3], cfg, dtype)
+    params["final_norm"] = common.rmsnorm_init(keys[-2], cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "w": common.truncnorm(keys[-1], (cfg.d_model, cfg.vocab), dtype)}
+    return params
+
+
+def param_specs(cfg: ModelConfig, rt: Runtime) -> Dict[str, Any]:
+    specs: Dict[str, Any] = {}
+    if cfg.frontend is None:
+        specs["embed"] = common.embed_specs(rt, cfg.vocab, cfg.d_model)
+    elif cfg.frontend == "vision":
+        specs["frontend"] = {
+            "proj": rt.spec_div(("fsdp", "tp"), (cfg.frontend_dim, cfg.d_model))}
+        specs["embed"] = common.embed_specs(rt, cfg.vocab, cfg.d_model)
+    else:
+        specs["frontend"] = {
+            "proj": rt.spec_div(("fsdp", "tp"), (cfg.frontend_dim, cfg.d_model))}
+
+    def stack(spec_tree):
+        return jax.tree.map(lambda s: P(*((None,) + tuple(s))), spec_tree,
+                            is_leaf=lambda s: isinstance(s, P))
+
+    blocks = {}
+    for i, ch in enumerate(cfg.layer_pattern):
+        blocks[str(i)] = stack(_block_specs(rt, cfg, ch))
+    specs["blocks"] = blocks
+    if "a" in cfg.layer_pattern:
+        specs["shared_attn"] = _shared_block_specs(rt, cfg)
+    specs["final_norm"] = common.rmsnorm_specs(rt)
+    if not cfg.tie_embeddings:
+        head_entries = ("fsdp", "tp") if rt.tp_size > 1 else (None, "fsdp")
+        specs["lm_head"] = {
+            "w": rt.spec_div(head_entries, (cfg.d_model, cfg.vocab))}
+    return specs
+
+
+# -----------------------------------------------------------------------------
+# Caches.
+# -----------------------------------------------------------------------------
+def _block_cache(rt: Runtime, cfg: ModelConfig, char: str, batch: int,
+                 length: int, dtype=jnp.bfloat16):
+    if char == "g":
+        if cfg.mla is not None:
+            return mla.init_mla_cache(rt, cfg, batch, length, dtype)
+        return attn_mod.init_kv_cache(rt, cfg, batch, length, 0, dtype)
+    if char in ("l", "a"):
+        return attn_mod.init_kv_cache(rt, cfg, batch, length, cfg.window, dtype)
+    if char == "m":
+        return ssm.init_ssm_cache(rt, cfg, batch)
+    if char == "r":
+        return rwkv.init_rwkv_cache(rt, cfg, batch)
+    raise ValueError(char)
+
+
+def _block_cache_specs(rt: Runtime, cfg: ModelConfig, char: str, batch: int,
+                       length: int):
+    if char == "g":
+        if cfg.mla is not None:
+            return mla.mla_cache_specs(rt, cfg, batch, length)
+        return attn_mod.kv_cache_specs(rt, cfg, batch, length, 0)
+    if char in ("l", "a"):
+        return attn_mod.kv_cache_specs(rt, cfg, batch, length, cfg.window)
+    if char == "m":
+        return ssm.ssm_cache_specs(rt, cfg, batch)
+    if char == "r":
+        return rwkv.rwkv_cache_specs(rt, cfg, batch)
+    raise ValueError(char)
+
+
+def init_cache(cfg: ModelConfig, rt: Runtime, batch: int, length: int,
+               dtype=jnp.bfloat16):
+    r = cfg.pattern_repeats
+    out = {}
+    for i, ch in enumerate(cfg.layer_pattern):
+        one = _block_cache(rt, cfg, ch, batch, length, dtype)
+        out[str(i)] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (r,) + x.shape), one)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, rt: Runtime, batch: int, length: int):
+    out = {}
+    for i, ch in enumerate(cfg.layer_pattern):
+        one = _block_cache_specs(rt, cfg, ch, batch, length)
+        out[str(i)] = jax.tree.map(
+            lambda s: P(*((None,) + tuple(s))), one,
+            is_leaf=lambda s: isinstance(s, P))
+    return out
+
+
+# -----------------------------------------------------------------------------
+# Forward.
+# -----------------------------------------------------------------------------
+def _apply_block(bp, cfg: ModelConfig, rt: Runtime, char: str, x, positions,
+                 cache, shared, *, block_skip: bool):
+    """One block; returns (x, new_cache, aux)."""
+    aux = jnp.float32(0.0)
+    if char in ("g", "l", "a"):
+        p = shared if char == "a" else bp
+        h = common.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        window = cfg.window if char in ("l", "a") and cfg.window > 0 else 0
+        if cfg.mla is not None and char != "a":
+            h, new_c = mla.mla_apply(p["attn"], cfg, rt, h, positions,
+                                     cache=cache, block_skip=block_skip)
+        else:
+            h, new_c = attn_mod.attn_apply(p["attn"], cfg, rt, h, positions,
+                                           window=window, cache=cache,
+                                           block_skip=block_skip)
+        if cfg.post_norms:
+            h = common.rmsnorm(p["ln1_post"], h, cfg.norm_eps)
+        x = x + h
+        h = common.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if char != "a" and cfg.moe is not None:
+            h, aux = moe.moe_apply(p["moe"], cfg, rt, h)
+        else:
+            h = common.mlp_apply(p["mlp"], h)
+        if cfg.post_norms:
+            h = common.rmsnorm(p["ln2_post"], h, cfg.norm_eps)
+        x = x + h
+        return x, new_c, aux
+    if char == "m":
+        h = common.rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        h, new_c = ssm.ssm_apply(bp["ssm"], cfg, rt, h, cache=cache)
+        return x + h, new_c, aux
+    if char == "r":
+        # rwkv block applies its own internal residuals on normed streams
+        h1 = common.rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        st = cache["state"] if cache is not None else None
+        tl = cache["tm_last"] if cache is not None else None
+        h, new_state, new_tl = rwkv.time_mix(bp["rwkv"]["tm"], cfg, rt, h1,
+                                             st, tl)
+        x = x + h
+        h2 = common.rmsnorm(bp["ln2"], x, cfg.norm_eps)
+        cl = cache["cm_last"] if cache is not None else None
+        h, new_cl = rwkv.channel_mix(bp["rwkv"]["cm"], cfg, x=h2, last=cl)
+        x = x + h
+        new_c = None
+        if cache is not None:
+            new_c = {"state": new_state, "tm_last": new_tl, "cm_last": new_cl}
+        return x, new_c, aux
+    raise ValueError(char)
+
+
+def forward(params, cfg: ModelConfig, rt: Runtime, batch: Dict[str, Any],
+            cache: Optional[dict] = None, *, block_skip: bool = False):
+    """Returns logits (B, S, V) and, if cache given, the updated cache."""
+    dt = common.dtype_of(cfg.dtype)
+    if cfg.frontend is None:
+        tokens = batch["tokens"]
+        x = params["embed"]["tok"].astype(dt)[tokens]
+    else:
+        x = jnp.einsum("bsf,fd->bsd", batch["embeds"].astype(dt),
+                       params["frontend"]["proj"].astype(dt))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(float(cfg.d_model) ** 0.5, dt)
+    # Residual-stream sharding: batch over fsdp; with sequence parallelism
+    # the sequence dim additionally shards over the model axis between
+    # blocks (norms/residuals/saved carries shrink tp×; attention/matmul
+    # boundaries gather, emitted by GSPMD).
+    _res_spec = ("fsdp", "tp", None) if (rt.sequence_parallel and
+                                         x.shape[1] % max(rt.tp_size, 1) == 0) \
+        else ("fsdp", None, None)
+    x = rt.shard(x, *_res_spec)
+
+    if "positions" in batch:
+        positions = batch["positions"]
+    else:
+        b, s = x.shape[:2]
+        if cache is not None and s == 1:
+            pos0 = None
+            for i in range(len(cfg.layer_pattern)):
+                ci = cache[str(i)]
+                if isinstance(ci, dict) and "pos" in ci:
+                    pos0 = ci["pos"][0]
+                    break
+            if pos0 is None:
+                pos0 = jnp.zeros((), jnp.int32)
+            positions = jnp.broadcast_to(pos0[None, None], (b, 1)).astype(jnp.int32)
+        else:
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                         (b, s))
+
+    if cfg.mrope_sections is not None and positions.ndim == 2:
+        # text-only default: temporal == h == w position (qwen2-vl semantics
+        # for pure-text spans; vision spans pass explicit (3, B, S)).
+        positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+
+    shared = params.get("shared_attn")
+    unit = cfg.layer_pattern
+    r = cfg.pattern_repeats
+
+    # Per-block inner checkpoints: the unit scan remat recomputes a whole
+    # unit during backward and would otherwise linearise every block at
+    # once — at zamba2's 19-block unit that is 19 blocks of SSM internals
+    # live simultaneously (26.5 GiB/device measured).  With the inner
+    # boundary, peak = one block's internals + the unit's carries.
+    _inner_ckpt = cfg.remat != "none" and len(cfg.layer_pattern) > 2
+
+    def _block(bp, ch, xc, c_i):
+        return _apply_block(bp, cfg, rt, ch, xc, positions, c_i, shared,
+                            block_skip=block_skip)
+
+    def unit_body(carry, xs):
+        xc, aux_acc = carry
+        bps, caches = xs
+        new_caches = {}
+        for i, ch in enumerate(unit):
+            c_i = caches.get(str(i)) if caches is not None else None
+            fn = (jax.checkpoint(functools.partial(_block, ch=ch),
+                                 policy=jax.checkpoint_policies.nothing_saveable,
+                                 static_argnums=())
+                  if _inner_ckpt else functools.partial(_block, ch=ch))
+            xc, nc, aux = fn(bps[str(i)], xc=xc, c_i=c_i)
+            xc = rt.shard(xc, *_res_spec)
+            if nc is not None:
+                new_caches[str(i)] = nc
+            aux_acc = aux_acc + aux
+        return (xc, aux_acc), (new_caches if new_caches else None)
+
+    body = unit_body
+    if cfg.remat == "full":
+        body = jax.checkpoint(
+            unit_body, policy=jax.checkpoint_policies.nothing_saveable)
+    elif cfg.remat == "dots":
+        body = jax.checkpoint(
+            unit_body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    if cfg.scan_layers and r > 1:
+        (x, aux_total), new_cache = jax.lax.scan(
+            body, (x, jnp.float32(0.0)), (params["blocks"], cache))
+    else:
+        aux_total = jnp.float32(0.0)
+        new_caches = []
+        for j in range(r):
+            bps = jax.tree.map(lambda p: p[j], params["blocks"])
+            cj = (jax.tree.map(lambda c: c[j], cache)
+                  if cache is not None else None)
+            (x, aux_total), nc = body((x, aux_total), (bps, cj))
+            new_caches.append(nc)
+        if cache is not None and new_caches[0] is not None:
+            new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+        else:
+            new_cache = None
+
+    x = common.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["tok"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"]["w"].astype(x.dtype))
+    if x.dtype == jnp.bfloat16:
+        logits = common.cast_cotangent_bf16(logits)
+    logits = rt.shard_spec(logits, rt.spec_div(
+        ("fsdp", None, "tp"), (logits.shape[0], logits.shape[1], cfg.vocab)))
+    if cache is not None:
+        return logits, new_cache, aux_total
+    return logits, aux_total
+
+
+def loss_fn(params, cfg: ModelConfig, rt: Runtime,
+            batch: Dict[str, Any]) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    logits, aux = forward(params, cfg, rt, batch)
+    if cfg.causal and cfg.frontend is None:
+        # next-token prediction: shift within the provided tokens
+        loss = common.cross_entropy(logits[:, :-1], batch["labels"][:, 1:],
+                                    cfg.final_softcap)
+    else:
+        loss = common.cross_entropy(logits, batch["labels"], cfg.final_softcap)
+    total = loss + AUX_COEF * aux
+    return total, {"ce": loss, "aux": aux}

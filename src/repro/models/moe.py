@@ -1,0 +1,276 @@
+"""Mixture-of-Experts block (DeepSeek-V2 160e top-6 + 2 shared; OLMoE 64e top-8).
+
+Default execution (``moe_mode='tp'``): *tensor-parallel experts* under
+shard_map — tokens stay on their data shard; every expert's FFN dimension
+is sharded over the model axis; dispatch is a local sort + ragged_dot
+(dropless, token-choice); partial outputs psum over 'model'.  No token ever
+crosses the data axes, so the only collective is the model-axis reduction —
+predictable and compile-friendly at 512 devices.
+
+Alternative (``moe_mode='ep'``): expert parallelism with fixed-capacity
+all_to_all dispatch over the model axis (each model shard owns E/tp whole
+experts).  This is the paper-relevant mode: all_to_all is exactly the
+adversarial traffic pattern FatPaths targets (DESIGN.md §4); the EP-vs-TP
+trade is one of the §Perf hillclimb subjects.
+
+Aux outputs: load-balance loss (switch-style) returned to the caller.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.sharding import P, Runtime
+from . import common
+from .config import ModelConfig
+
+
+def moe_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": common.truncnorm(ks[0], (d, m.n_experts), dtype),
+        "w1": common.truncnorm(ks[1], (m.n_experts, d, m.d_ff_expert), dtype),
+        "w3": common.truncnorm(ks[2], (m.n_experts, d, m.d_ff_expert), dtype),
+        "w2": common.truncnorm(ks[3], (m.n_experts, m.d_ff_expert, d), dtype,
+                               scale=0.02 / np.sqrt(2 * cfg.n_layers)),
+    }
+    if m.n_shared > 0:
+        f_sh = m.n_shared * m.d_ff_shared
+        p["shared"] = common.mlp_init(ks[4], d, f_sh, dtype)
+    return p
+
+
+def moe_specs(rt: Runtime, cfg: ModelConfig):
+    m = cfg.moe
+    d = cfg.d_model
+    if rt.moe_mode == "ep" and rt.tp_size > 1 \
+            and m.n_experts % rt.tp_size == 0:
+        # EP: experts live whole on their model shard AND are ZeRO-sharded
+        # over fsdp (storage matches the dispatch layout up to the fsdp
+        # all-gather of the *local* experts).  We measured the ZeRO-1
+        # alternative (whole local experts, no per-layer AG): at dsv2
+        # scale expert weights are 98% of 236B params, so whole storage is
+        # 170 GiB/device — refuted; the per-layer AG is the right trade
+        # (EXPERIMENTS.md §Perf iter dsv2#5).
+        s = {
+            "router": rt.spec_div(("fsdp", None), (d, m.n_experts)),
+            "w1": rt.spec_div(("tp", "fsdp", None),
+                              (m.n_experts, d, m.d_ff_expert)),
+            "w3": rt.spec_div(("tp", "fsdp", None),
+                              (m.n_experts, d, m.d_ff_expert)),
+            "w2": rt.spec_div(("tp", None, "fsdp"),
+                              (m.n_experts, m.d_ff_expert, d)),
+        }
+    else:
+        s = {
+            "router": rt.spec_div(("fsdp", None), (d, m.n_experts)),
+            "w1": rt.spec_div((None, "fsdp", "tp"),
+                              (m.n_experts, d, m.d_ff_expert)),
+            "w3": rt.spec_div((None, "fsdp", "tp"),
+                              (m.n_experts, d, m.d_ff_expert)),
+            "w2": rt.spec_div((None, "tp", "fsdp"),
+                              (m.n_experts, m.d_ff_expert, d)),
+        }
+    if m.n_shared > 0:
+        f_sh = m.n_shared * m.d_ff_shared
+        s["shared"] = common.mlp_specs(rt, d, f_sh)
+    return s
+
+
+def _route(x_flat, router_w, m, dtype):
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, m.top_k)
+    if m.router_scale:
+        topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    # switch-style load-balance aux: E * sum_e f_e * p_e
+    f_e = jnp.zeros(m.n_experts).at[topi.reshape(-1)].add(1.0)
+    f_e = f_e / jnp.maximum(f_e.sum(), 1.0)
+    p_e = probs.mean(axis=0)
+    aux = m.n_experts * jnp.sum(f_e * p_e)
+    return topw.astype(dtype), topi.astype(jnp.int32), aux
+
+
+def _expert_ffn_sorted(xs, gs, w1, w3, w2, dtype):
+    """ragged_dot pipeline over expert-sorted rows."""
+    h1 = jax.lax.ragged_dot(xs, w1.astype(dtype), gs)
+    h3 = jax.lax.ragged_dot(xs, w3.astype(dtype), gs)
+    hs = jax.nn.silu(h1) * h3
+    return jax.lax.ragged_dot(hs, w2.astype(dtype), gs)
+
+
+def _moe_body_tp(cfg: ModelConfig, rt: Runtime, do_psum: bool):
+    m = cfg.moe
+
+    def body(x, router_w, w1, w3, w2, shared):
+        b, s, d = x.shape
+        dt = x.dtype
+        x_flat = x.reshape(-1, d)
+        t = x_flat.shape[0]
+        topw, topi, aux = _route(x_flat, router_w, m, dt)
+        eid = topi.reshape(-1)                             # (T*k,)
+        xr = jnp.repeat(x_flat, m.top_k, axis=0)           # token-major
+        order = jnp.argsort(eid)
+        xs = xr[order]
+        gs = jnp.zeros((m.n_experts,), jnp.int32).at[eid].add(1)
+        ys = _expert_ffn_sorted(xs, gs, w1, w3, w2, dt)
+        y = jnp.zeros_like(ys).at[order].set(ys)
+        y = (y.reshape(t, m.top_k, d)
+             * topw[..., None].astype(dt)).sum(axis=1)
+        if shared is not None:
+            y = y + common.mlp_apply(shared, x, act="silu").reshape(t, d)
+        if do_psum:
+            y = jax.lax.psum(y, rt.model_axis)
+            aux = jax.lax.pmean(aux, rt.model_axis)
+            for a in rt.data_axes:
+                aux = jax.lax.pmean(aux, a)
+        return y.reshape(b, s, d), aux
+
+    return body
+
+
+def _moe_body_ep(cfg: ModelConfig, rt: Runtime):
+    """Expert-parallel body: fixed-capacity all_to_all over the model axis.
+
+    Each model shard owns E/tp whole experts (full FFN width).  Tokens are
+    bucketed by destination shard, padded to a fixed capacity, exchanged
+    with all_to_all, processed with ragged_dot over local experts, and sent
+    back.  Overflowing tokens are dropped (capacity_factor controls slack) —
+    the classic EP trade; aux loss keeps the router balanced.
+    """
+    m = cfg.moe
+
+    def body(x, router_w, w1, w3, w2, shared):
+        b, s, d = x.shape
+        dt = x.dtype
+        ax = rt.model_axis
+        nsh = rt.tp_size
+        e_loc = m.n_experts // nsh
+        x_flat = x.reshape(-1, d)
+        t = x_flat.shape[0]
+        topw, topi, aux = _route(x_flat, router_w, m, dt)
+        eid = topi.reshape(-1)
+        dest = eid // e_loc                                # (T*k,)
+        cap = int(np.ceil(t * m.top_k / nsh * m.capacity_factor))
+        xr = jnp.repeat(x_flat, m.top_k, axis=0)
+        # stable sort by dest; rank within dest bucket
+        order = jnp.argsort(dest)
+        dsort = dest[order]
+        esort = eid[order]
+        xsort = xr[order]
+        pos_in_bucket = jnp.arange(t * m.top_k) - jnp.searchsorted(
+            dsort, dsort, side="left")
+        keep = pos_in_bucket < cap
+        # scatter into (nsh, cap, D) send buffers (dropped rows -> trash row)
+        slot = jnp.where(keep, dsort * cap + pos_in_bucket, nsh * cap)
+        send = jnp.zeros((nsh * cap + 1, d), dt).at[slot].set(xsort)[:-1]
+        send_e = jnp.full((nsh * cap + 1,), -1, jnp.int32).at[slot].set(
+            jnp.where(keep, esort, -1))[:-1]
+        send = send.reshape(nsh, cap, d)
+        send_e = send_e.reshape(nsh, cap)
+        recv = jax.lax.all_to_all(send, ax, split_axis=0, concat_axis=0,
+                                  tiled=False)
+        recv_e = jax.lax.all_to_all(send_e, ax, split_axis=0, concat_axis=0,
+                                    tiled=False)
+        rtok = recv.reshape(nsh * cap, d)
+        re = recv_e.reshape(nsh * cap)
+        shard = jax.lax.axis_index(ax)
+        le = jnp.where(re < 0, e_loc, re - shard * e_loc)  # local expert id
+        # fixed-capacity batched expert matmul: pad each local expert's rows
+        # to cap_e and run ONE (e_loc, cap_e, d) x (e_loc, d, f) einsum —
+        # exact active FLOPs (x capacity slack), unlike ragged_dot whose
+        # XLA:CPU lowering densifies over every group.
+        cap_e = int(np.ceil(nsh * cap / e_loc * m.capacity_factor))
+        order2 = jnp.argsort(le)
+        le_s = le[order2]
+        x_s = rtok[order2]
+        pos_e = jnp.arange(nsh * cap) - jnp.searchsorted(le_s, le_s,
+                                                         side="left")
+        keep2 = (pos_e < cap_e) & (le_s < e_loc)
+        slot2 = jnp.where(keep2, le_s * cap_e + pos_e, e_loc * cap_e)
+        xbuf = jnp.zeros((e_loc * cap_e + 1, d), dt).at[slot2].set(x_s)[:-1]
+        xbuf = xbuf.reshape(e_loc, cap_e, d)
+        h1 = jnp.einsum("ecd,edf->ecf", xbuf, w1.astype(dt))
+        h3 = jnp.einsum("ecd,edf->ecf", xbuf, w3.astype(dt))
+        hs = jax.nn.silu(h1) * h3
+        ybuf = jnp.einsum("ecf,efd->ecd", hs, w2.astype(dt))
+        yflat = ybuf.reshape(e_loc * cap_e, d)
+        y_s = jnp.where(keep2[:, None],
+                        yflat[jnp.minimum(slot2, e_loc * cap_e - 1)], 0.0)
+        yr = jnp.zeros_like(y_s).at[order2].set(y_s).reshape(nsh, cap, d)
+        back = jax.lax.all_to_all(yr, ax, split_axis=0, concat_axis=0,
+                                  tiled=False).reshape(nsh * cap, d)
+        # gather back into sorted-by-dest order, then unsort
+        ysort = jnp.where(keep[:, None],
+                          back[jnp.where(keep, slot, 0)], 0.0)
+        y = jnp.zeros((t * m.top_k, d), dt).at[order].set(ysort)
+        y = (y.reshape(t, m.top_k, d) * topw[..., None].astype(dt)).sum(axis=1)
+        if shared is not None:
+            # shared experts run replicated across the model axis in EP mode
+            y = y + common.mlp_apply(shared, x, act="silu").reshape(t, d)
+        aux = jax.lax.pmean(aux, ax)
+        for a in rt.data_axes:
+            aux = jax.lax.pmean(aux, a)
+        return y.reshape(b, s, d), aux
+
+    return body
+
+
+def moe_apply(params, cfg: ModelConfig, rt: Runtime, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (y, aux_loss)."""
+    m = cfg.moe
+    shared = params.get("shared")
+    if rt.mesh is None or rt.tp_size == 1:
+        # no model axis: plain pjit path (GSPMD shards over the data axes)
+        body = _moe_body_tp(cfg, rt, do_psum=False)
+        return body(x, params["router"], params["w1"], params["w3"],
+                    params["w2"], shared)
+
+    mode = rt.moe_mode
+    fs = rt.fsdp
+    tp = rt.tp
+    s_len = x.shape[1]
+    if mode == "ep" and s_len % max(rt.tp_size, 1) != 0:
+        mode = "tp"   # decode with S=1: EP dispatch degenerates; use TP
+    x_spec = P(fs, None, None)
+    if mode == "tp":
+        body = _moe_body_tp(cfg, rt, do_psum=True)
+        expert_specs = (P(None, None, tp), P(None, None, tp), P(None, tp, None))
+        shared_spec = {"wi": P(None, None, tp), "wo": P(tp, None)}
+    elif mode == "ep":
+        body = _moe_body_ep(cfg, rt)
+        # tokens are SPLIT over the model axis (sequence dim) before the
+        # all_to_all — each model shard dispatches only its own rows; with
+        # sequence parallelism this is exactly the residual sharding, so no
+        # resharding happens at the block boundary.
+        x_spec = P(fs, tp, None)
+        e_spec = P(tp, None, None)  # experts split over model shards
+        expert_specs = (e_spec, e_spec, e_spec)
+        shared_spec = {"wi": P(None, None, None), "wo": P(None, None)}
+    else:
+        raise ValueError(mode)
+    out_specs = (x_spec, P())
+    # cast expert weights to the activation dtype BEFORE shard_map so the
+    # fsdp all-gather of the (dominant) expert params moves bf16, not f32
+    dt = x.dtype
+    w1, w3, w2 = (params["w1"].astype(dt), params["w3"].astype(dt),
+                  params["w2"].astype(dt))
+    if shared is None:
+        fn = rt.shard_map(
+            lambda a, rw, w1, w3, w2: body(a, rw, w1, w3, w2, None),
+            in_specs=(x_spec, P(None, None)) + expert_specs,
+            out_specs=out_specs)
+        return fn(x, params["router"], w1, w3, w2)
+    shared_c = jax.tree.map(lambda w: w.astype(dt), shared)
+    fn = rt.shard_map(
+        body,
+        in_specs=(x_spec, P(None, None)) + expert_specs + (shared_spec,),
+        out_specs=out_specs)
+    return fn(x, params["router"], w1, w3, w2, shared_c)

@@ -1,0 +1,199 @@
+"""RWKV6 "Finch" block (arXiv:2404.05892): attention-free time mix with
+data-dependent decay + squared-ReLU channel mix.
+
+Time mix per head (K = V = head_dim):
+    w_t = exp(-exp(w0 + tanh(xw_t @ A) @ B))      (data-dependent decay, LoRA)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t @ (S_{t-1} + diag(u) k_t v_t^T)
+followed by a per-head RMS norm, SiLU gate g, and output projection.
+Token-shift mixing (static mu per r/k/v/g/w) precedes every projection.
+
+The recurrence is computed with an exact sequential ``lax.scan``: RWKV6's
+*per-channel* decay makes the chunked-parallel (GLA-style) form numerically
+explosive without a custom kernel (exp(+cumsum) factors) — on TPU the right
+answer is a Pallas chunked-GLA kernel (future work, see DESIGN.md); here the
+scan is both the reference semantics and the shipped implementation.  The
+state is O(H*K*V) per sequence — this is what makes rwkv6 runnable at
+``long_500k`` where attention archs are skipped.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.sharding import Runtime
+from . import common
+from .config import ModelConfig
+
+
+def rwkv_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    r = cfg.rwkv
+    d = cfg.d_model
+    f = cfg.d_ff
+    nh = d // r.head_dim
+    ks = jax.random.split(key, 10)
+    scale_o = 0.02 / np.sqrt(2 * cfg.n_layers)
+    return {
+        "tm": {  # time mix
+            "mu": common.truncnorm(ks[0], (5, d), dtype, scale=0.1),  # r,k,v,g,w
+            "wr": common.truncnorm(ks[1], (d, d), dtype),
+            "wk": common.truncnorm(ks[2], (d, d), dtype),
+            "wv": common.truncnorm(ks[3], (d, d), dtype),
+            "wg": common.truncnorm(ks[4], (d, d), dtype),
+            "w0": jnp.asarray(np.linspace(-6.0, -0.5, d), dtype),
+            "wa": common.truncnorm(ks[5], (d, r.decay_lora), dtype),
+            "wb": common.truncnorm(ks[6], (r.decay_lora, d), dtype),
+            "u": common.truncnorm(ks[7], (nh, r.head_dim), dtype, scale=0.3),
+            "ln": common.rmsnorm_init(ks[7], d, dtype),
+            "wo": common.truncnorm(ks[8], (d, d), dtype, scale=scale_o),
+        },
+        "cm": {  # channel mix
+            "mu": common.truncnorm(ks[9], (2, d), dtype, scale=0.1),  # k, r
+            "wk": common.truncnorm(ks[9], (d, f), dtype),
+            "wv": common.truncnorm(ks[0], (f, d), dtype, scale=scale_o),
+            "wr": common.truncnorm(ks[1], (d, d), dtype),
+        },
+    }
+
+
+def rwkv_specs(rt: Runtime, cfg: ModelConfig):
+    r = cfg.rwkv
+    d, f = cfg.d_model, cfg.d_ff
+    nh = d // r.head_dim
+    dd = rt.spec_div(("fsdp", "tp"), (d, d))
+    return {
+        "tm": {
+            "mu": rt.spec_div((None, "fsdp"), (5, d)),
+            "wr": dd, "wk": dd, "wv": dd, "wg": dd,
+            "w0": rt.spec_div(("fsdp",), (d,)),
+            "wa": rt.spec_div(("fsdp", None), (d, r.decay_lora)),
+            "wb": rt.spec_div((None, "fsdp"), (r.decay_lora, d)),
+            "u": rt.spec_div(("tp", None), (nh, r.head_dim)),
+            "ln": common.rmsnorm_specs(rt),
+            "wo": rt.spec_div(("tp", "fsdp"), (d, d)),
+        },
+        "cm": {
+            "mu": rt.spec_div((None, "fsdp"), (2, d)),
+            "wk": rt.spec_div(("fsdp", "tp"), (d, f)),
+            "wv": rt.spec_div(("tp", "fsdp"), (f, d)),
+            "wr": dd,
+        },
+    }
+
+
+def _token_shift(x, last: Optional[jnp.ndarray]):
+    """x_{t-1} with either zero or cached boundary token."""
+    if last is None:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        # cache dtype (f32) must not contaminate the bf16 stream
+        prev = jnp.concatenate([last.astype(x.dtype)[:, None, :], x[:, :-1]],
+                               axis=1)
+    return prev
+
+
+def time_mix(p, cfg: ModelConfig, rt: Runtime, x, state, last):
+    """x: (B, L, D); state: (B, H, K, V) or None; last: (B, D) or None."""
+    r_cfg = cfg.rwkv
+    b, l, d = x.shape
+    nh = d // r_cfg.head_dim
+    hd = r_cfg.head_dim
+    dt = x.dtype
+    prev = _token_shift(x, last)
+    mu = p["mu"].astype(dt)
+    xr = x + (prev - x) * mu[0]
+    xk = x + (prev - x) * mu[1]
+    xv = x + (prev - x) * mu[2]
+    xg = x + (prev - x) * mu[3]
+    xw = x + (prev - x) * mu[4]
+    r = jnp.einsum("bld,de->ble", xr, p["wr"].astype(dt))
+    k = jnp.einsum("bld,de->ble", xk, p["wk"].astype(dt))
+    v = jnp.einsum("bld,de->ble", xv, p["wv"].astype(dt))
+    g = jax.nn.silu(jnp.einsum("bld,de->ble", xg, p["wg"].astype(dt)))
+    lora = jnp.tanh(jnp.einsum("bld,dr->blr", xw, p["wa"].astype(dt)))
+    wlog = (p["w0"].astype(jnp.float32)
+            + jnp.einsum("blr,re->ble", lora,
+                         p["wb"].astype(dt)).astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(wlog))                        # (B, L, D) in (0,1)
+
+    rh = r.reshape(b, l, nh, hd).astype(jnp.float32)
+    kh = k.reshape(b, l, nh, hd).astype(jnp.float32)
+    vh = v.reshape(b, l, nh, hd).astype(jnp.float32)
+    wh = w.reshape(b, l, nh, hd)
+    u = p["u"].astype(jnp.float32)
+
+    def step(s, inp):
+        rt_, kt, vt, wt = inp                          # (B, H, K) each
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        yt = jnp.einsum("bhk,bhkv->bhv", rt_, s + u[None, :, :, None] * kv)
+        s = s * wt[..., None] + kv
+        return s, yt
+
+    if state is None:
+        state = jnp.zeros((b, nh, hd, hd), jnp.float32)
+    xs = (rh.transpose(1, 0, 2, 3), kh.transpose(1, 0, 2, 3),
+          vh.transpose(1, 0, 2, 3), wh.transpose(1, 0, 2, 3))
+    state, ys = jax.lax.scan(step, state, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, l, d).astype(dt)
+    y = common.rmsnorm(p["ln"], y, cfg.norm_eps) * g
+    out = jnp.einsum("bld,de->ble", y, p["wo"].astype(dt))
+    return out, state, x[:, -1, :].astype(jnp.float32)
+
+
+def channel_mix(p, cfg: ModelConfig, x, last):
+    dt = x.dtype
+    prev = _token_shift(x, last)
+    mu = p["mu"].astype(dt)
+    xk = x + (prev - x) * mu[0]
+    xr = x + (prev - x) * mu[1]
+    k = jnp.einsum("bld,df->blf", xk, p["wk"].astype(dt))
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("blf,fd->bld", k, p["wv"].astype(dt))
+    r = jax.nn.sigmoid(jnp.einsum("bld,de->ble", xr, p["wr"].astype(dt)))
+    return r * kv, x[:, -1, :].astype(jnp.float32)
+
+
+def rwkv_apply(params, cfg: ModelConfig, rt: Runtime, x, *,
+               cache: Optional[dict] = None) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Full RWKV6 block: time mix + channel mix with their residuals.
+
+    cache: {"state": (B,H,K,V), "tm_last": (B,D), "cm_last": (B,D)}.
+    """
+    st = cache["state"] if cache is not None else None
+    tl = cache["tm_last"] if cache is not None else None
+    cl = cache["cm_last"] if cache is not None else None
+    h, new_state, new_tl = time_mix(params["tm"], cfg, rt, x, st, tl)
+    x = x + h
+    h2, new_cl = channel_mix(params["cm"], cfg, x, cl)
+    out = x + h2
+    new_cache = None
+    if cache is not None:
+        new_cache = {"state": new_state, "tm_last": new_tl, "cm_last": new_cl}
+    return out, new_cache
+
+
+def init_rwkv_cache(rt: Runtime, cfg: ModelConfig, batch: int):
+    r = cfg.rwkv
+    d = cfg.d_model
+    nh = d // r.head_dim
+    return {
+        "state": jnp.zeros((batch, nh, r.head_dim, r.head_dim), jnp.float32),
+        "tm_last": jnp.zeros((batch, d), jnp.float32),
+        "cm_last": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def rwkv_cache_specs(rt: Runtime, cfg: ModelConfig, batch: int):
+    r = cfg.rwkv
+    d = cfg.d_model
+    nh = d // r.head_dim
+    return {
+        "state": rt.spec_div(("fsdp", "tp", None, None),
+                             (batch, nh, r.head_dim, r.head_dim)),
+        "tm_last": rt.spec_div(("fsdp", None), (batch, d)),
+        "cm_last": rt.spec_div(("fsdp", None), (batch, d)),
+    }

@@ -1,0 +1,238 @@
+"""Mamba2 (SSD) block for Zamba2 (arXiv:2411.15242 / 2405.21060).
+
+Recurrence per head h (P = head_dim, N = d_state):
+    h_t = a_t * h_{t-1} + dt_t * x_t (outer) B_t        h: (P, N)
+    y_t = (h_t . C_t) + D * x_t
+with a_t = exp(-exp(A_log) * dt_t), dt_t = softplus(dt_raw + dt_bias),
+B_t/C_t shared across heads (n_groups = 1), depthwise causal conv (width 4)
+over the (x, B, C) channels, and a gated RMSNorm before out-projection.
+
+Two paths, equal semantics (tests compare them):
+  * ``ssd_scan``    — exact sequential lax.scan (oracle + decode step);
+  * ``ssd_chunked`` — SSD block-decomposition: within-chunk (Q x Q) decay
+    matrices (scalar per-head decay keeps this numerically safe: all
+    exponents are <= 0) + an inter-chunk state scan.  This is the
+    compile-time- and memory-bounded path used for training.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.sharding import Runtime
+from . import common
+from .config import ModelConfig
+
+
+def ssm_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    s = cfg.ssm
+    d = cfg.d_model
+    din = cfg.d_inner_ssm
+    nh = cfg.n_ssm_heads
+    conv_dim = din + 2 * s.d_state
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": common.truncnorm(ks[0], (d, 2 * din + 2 * s.d_state + nh), dtype),
+        "conv_w": common.truncnorm(ks[1], (s.conv_width, conv_dim), dtype, scale=0.2),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": jnp.asarray(
+            np.log(np.expm1(np.linspace(1e-3, 0.1, nh))), dtype),
+        "A_log": jnp.asarray(np.log(np.linspace(1.0, 16.0, nh)), dtype),
+        "D": jnp.ones((nh,), dtype),
+        "norm": common.rmsnorm_init(ks[2], din, dtype),
+        "out_proj": common.truncnorm(ks[3], (din, d), dtype,
+                                     scale=0.02 / np.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def ssm_specs(rt: Runtime, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    din = cfg.d_inner_ssm
+    nh = cfg.n_ssm_heads
+    conv_dim = din + 2 * s.d_state
+    return {
+        "in_proj": rt.spec_div(("fsdp", "tp"), (d, 2 * din + 2 * s.d_state + nh)),
+        "conv_w": rt.spec_div((None, "tp"), (s.conv_width, conv_dim)),
+        "conv_b": rt.spec_div(("tp",), (conv_dim,)),
+        "dt_bias": rt.spec_div(("tp",), (nh,)),
+        "A_log": rt.spec_div(("tp",), (nh,)),
+        "D": rt.spec_div(("tp",), (nh,)),
+        "norm": common.rmsnorm_specs(rt),
+        "out_proj": rt.spec_div(("tp", "fsdp"), (din, d)),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj):
+    s = cfg.ssm
+    din = cfg.d_inner_ssm
+    nh = cfg.n_ssm_heads
+    z = proj[..., :din]
+    x = proj[..., din:2 * din]
+    b = proj[..., 2 * din:2 * din + s.d_state]
+    c = proj[..., 2 * din + s.d_state:2 * din + 2 * s.d_state]
+    dt = proj[..., 2 * din + 2 * s.d_state:]
+    return z, x, b, c, dt
+
+
+def _causal_conv(u, w, bias, conv_cache=None):
+    """Depthwise causal conv, width W: (B, L, C) with (W, C) filters."""
+    wdt = u.dtype
+    width = w.shape[0]
+    if conv_cache is not None:
+        u_ext = jnp.concatenate([conv_cache.astype(wdt), u], axis=1)
+    else:
+        u_ext = jnp.pad(u, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(width):
+        sl = u_ext[:, i:i + u.shape[1]]
+        out = out + sl * w[i].astype(wdt)
+    new_cache = u_ext[:, -(width - 1):] if width > 1 else None
+    return jax.nn.silu(out + bias.astype(wdt)), new_cache
+
+
+def ssd_chunked(x, dt, a_log, b, c, d_skip, chunk: int):
+    """SSD forward. x: (B, L, H, P); dt: (B, L, H); b, c: (B, L, N)."""
+    bsz, l, h, p = x.shape
+    n = b.shape[-1]
+    q = chunk
+    nc = -(-l // q)
+    pad = nc * q - l
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    f32 = jnp.float32
+    xq = x.reshape(bsz, nc, q, h, p).astype(f32)
+    dtq = dt.reshape(bsz, nc, q, h).astype(f32)
+    bq = b.reshape(bsz, nc, q, n).astype(f32)
+    cq = c.reshape(bsz, nc, q, n).astype(f32)
+    loga = -jnp.exp(a_log.astype(f32))[None, None, None, :] * dtq  # (B,nc,Q,H)
+    la = jnp.cumsum(loga, axis=2)                                  # inclusive
+    # intra-chunk: G[b,c,h,i,j] = (C_i.B_j) exp(la_i - la_j) dt_j, i >= j
+    cb = jnp.einsum("bcin,bcjn->bcij", cq, bq)
+    la_h = la.transpose(0, 1, 3, 2)                                 # (B,nc,H,Q)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    ldiff = la_h[:, :, :, :, None] - la_h[:, :, :, None, :]          # (B,nc,H,i,j)
+    decay = jnp.exp(jnp.where(mask, ldiff, -jnp.inf))
+    g = cb[:, :, None] * decay
+    g = g * dtq.transpose(0, 1, 3, 2)[:, :, :, None, :]             # dt_j
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", g, xq)
+    # chunk states: S_c = sum_j exp(la_end - la_j) dt_j x_j (outer) B_j
+    la_end = la[:, :, -1:, :]                                        # (B,nc,1,H)
+    w_end = jnp.exp(la_end - la) * dtq                               # (B,nc,Q,H)
+    s_c = jnp.einsum("bcqh,bcqhp,bcqn->bchpn", w_end, xq, bq)
+    # inter-chunk scan
+    decay_chunk = jnp.exp(la_end[:, :, 0, :])                        # (B,nc,H)
+
+    def scan_fn(s_in, inp):
+        dchunk, s_new = inp
+        s_out = s_in * dchunk[..., None, None] + s_new
+        return s_out, s_in
+
+    s0 = jnp.zeros((bsz, h, p, n), f32)
+    _, s_ins = jax.lax.scan(
+        scan_fn, s0,
+        (decay_chunk.transpose(1, 0, 2), s_c.transpose(1, 0, 2, 3, 4)))
+    s_ins = s_ins.transpose(1, 0, 2, 3, 4)                           # (B,nc,H,P,N)
+    y_inter = jnp.einsum("bcqh,bcqn,bchpn->bcqhp", jnp.exp(la), cq, s_ins)
+    y = (y_intra + y_inter).reshape(bsz, nc * q, h, p)
+    if pad:
+        y = y[:, :l]
+    y = y + x[:, :l].astype(f32) * d_skip.astype(f32)[None, None, :, None]
+    return y
+
+
+def ssd_scan(x, dt, a_log, b, c, d_skip, state=None):
+    """Exact sequential recurrence; also the decode step (L == 1)."""
+    bsz, l, h, p = x.shape
+    n = b.shape[-1]
+    f32 = jnp.float32
+    a = jnp.exp(-jnp.exp(a_log.astype(f32))[None, None, :] * dt.astype(f32))
+
+    def step(s, inp):
+        xt, at, dtt, bt, ct = inp
+        s = s * at[:, :, None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dtt, xt, bt)
+        yt = jnp.einsum("bhpn,bn->bhp", s, ct)
+        return s, yt
+
+    if state is None:
+        state = jnp.zeros((bsz, h, p, n), f32)
+    xs = (x.transpose(1, 0, 2, 3).astype(f32), a.transpose(1, 0, 2),
+          dt.transpose(1, 0, 2).astype(f32), b.transpose(1, 0, 2).astype(f32),
+          c.transpose(1, 0, 2).astype(f32))
+    state, ys = jax.lax.scan(step, state, xs)
+    y = ys.transpose(1, 0, 2, 3)
+    y = y + x.astype(f32) * d_skip.astype(f32)[None, None, :, None]
+    return y, state
+
+
+def ssm_apply(params, cfg: ModelConfig, rt: Runtime, x, *,
+              cache: Optional[dict] = None) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """x: (B, S, D) -> (out, new_cache)."""
+    s = cfg.ssm
+    bsz, l, d = x.shape
+    din = cfg.d_inner_ssm
+    nh = cfg.n_ssm_heads
+    dt_ = x.dtype
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt_))
+    z, xi, b, c, dtr = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xi, b, c], axis=-1)
+    conv_cache = cache.get("conv") if cache is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, params["conv_w"],
+                                      params["conv_b"], conv_cache)
+    xi = conv_out[..., :din].reshape(bsz, l, nh, s.head_dim)
+    b = conv_out[..., din:din + s.d_state]
+    c = conv_out[..., din + s.d_state:]
+    dtv = jax.nn.softplus(dtr.astype(jnp.float32)
+                          + params["dt_bias"].astype(jnp.float32))
+    xi = rt.shard(xi, "fsdp", None, "tp", None)
+
+    new_cache = None
+    if cache is not None and l == 1:
+        y, new_state = ssd_scan(xi, dtv, params["A_log"], b, c, params["D"],
+                                state=cache["state"])
+        new_cache = {"state": new_state, "conv": new_conv}
+    elif l <= 2 * s.chunk:
+        y, final_state = ssd_scan(xi, dtv, params["A_log"], b, c, params["D"])
+        if cache is not None:
+            new_cache = {"state": final_state, "conv": new_conv}
+    else:
+        y = ssd_chunked(xi, dtv, params["A_log"], b, c, params["D"], s.chunk)
+        if cache is not None:
+            _, final_state = ssd_scan(xi, dtv, params["A_log"], b, c,
+                                      params["D"])
+            new_cache = {"state": final_state, "conv": new_conv}
+    y = y.reshape(bsz, l, din).astype(dt_)
+    y = common.rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dt_))
+    return out, new_cache
+
+
+def init_ssm_cache(rt: Runtime, cfg: ModelConfig, batch: int,
+                   dtype=jnp.float32):
+    s = cfg.ssm
+    din = cfg.d_inner_ssm
+    return {
+        "state": jnp.zeros((batch, cfg.n_ssm_heads, s.head_dim, s.d_state),
+                           jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, din + 2 * s.d_state),
+                          dtype),
+    }
+
+
+def ssm_cache_specs(rt: Runtime, cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    din = cfg.d_inner_ssm
+    return {
+        "state": rt.spec_div(("fsdp", "tp", None, None),
+                             (batch, cfg.n_ssm_heads, s.head_dim, s.d_state)),
+        "conv": rt.spec_div(("fsdp", None, "tp"),
+                            (batch, s.conv_width - 1, din + 2 * s.d_state)),
+    }

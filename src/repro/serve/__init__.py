@@ -1,0 +1,1 @@
+from .engine import ServeConfig, ServingEngine, make_prefill_step, make_decode_step  # noqa: F401

@@ -1,0 +1,132 @@
+"""Batched serving: prefill + decode steps and a request-batching engine.
+
+``serve_step`` semantics per the task spec: the ``decode_*`` / ``long_*``
+dry-run shapes lower ``make_decode_step`` — one new token against a KV/state
+cache of ``seq_len`` — and ``prefill_*`` shapes lower ``make_prefill_step``
+(full forward writing the cache).
+
+Cache kinds come from the model family (models.model.init_cache):
+GQA KV pages, MLA compressed latents (DeepSeek-V2), Mamba2/RWKV recurrent
+state.  For encoder-only archs (hubert) there is no decode step — the
+engine exposes ``encode`` only.
+
+The `ServingEngine` is a minimal continuous-batching driver used by
+examples/serve_batch.py: fixed-size slot table, greedy sampling,
+per-request completion tracking. FatPaths tie-in: the engine's slot→replica
+assignment reuses flowlet-style balancing (pick the least-loaded replica of
+those whose "layer" can serve; see examples).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.sharding import Runtime
+from ..models import model as model_mod
+from ..models.config import ModelConfig
+
+__all__ = ["ServeConfig", "make_prefill_step", "make_decode_step",
+           "ServingEngine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch: int
+    max_len: int
+    temperature: float = 0.0      # 0 => greedy
+    cache_dtype: str = "bfloat16"
+
+
+def make_prefill_step(cfg: ModelConfig, rt: Runtime, sc: ServeConfig):
+    """(params, tokens|embeds) -> (last-token logits, primed cache)."""
+
+    def prefill(params, batch: Dict[str, Any]):
+        dtype = jnp.bfloat16 if sc.cache_dtype == "bfloat16" else jnp.float32
+        cache = model_mod.init_cache(cfg, rt, sc.batch, sc.max_len, dtype)
+        logits, cache, _ = model_mod.forward(params, cfg, rt, batch,
+                                             cache=cache)
+        return logits[:, -1], cache
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, rt: Runtime, sc: ServeConfig):
+    """(params, cache, last_token) -> (next_token, logits, cache)."""
+    assert cfg.decoder, f"{cfg.name} is encoder-only: no decode step"
+
+    def decode(params, cache, tokens):
+        # frontend archs decode from (stubbed) per-step embeddings
+        key = "embeds" if cfg.frontend is not None else "tokens"
+        batch = {key: tokens}
+        logits, cache, _ = model_mod.forward(params, cfg, rt, batch,
+                                             cache=cache)
+        lg = logits[:, -1].astype(jnp.float32)
+        if cfg.final_softcap:
+            lg = cfg.final_softcap * jnp.tanh(lg / cfg.final_softcap)
+        nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        return nxt, lg, cache
+
+    return decode
+
+
+class ServingEngine:
+    """Continuous batching over a fixed slot table (single replica)."""
+
+    def __init__(self, cfg: ModelConfig, rt: Runtime, params,
+                 sc: ServeConfig):
+        self.cfg, self.rt, self.sc = cfg, rt, sc
+        self.params = params
+        self.prefill = jax.jit(make_prefill_step(cfg, rt, sc))
+        self.decode = jax.jit(make_decode_step(cfg, rt, sc)) if cfg.decoder \
+            else None
+        self.reset()
+
+    def reset(self) -> None:
+        self.cache = None
+        self.last = np.zeros(self.sc.batch, np.int32)
+        self.done = np.ones(self.sc.batch, bool)
+        self.outputs: List[List[int]] = [[] for _ in range(self.sc.batch)]
+        self.budget = np.zeros(self.sc.batch, np.int32)
+
+    def submit(self, prompts: List[np.ndarray], max_new: int = 16) -> None:
+        """Prefill a full batch of prompts (right-aligned to equal length)."""
+        b, cfg = self.sc.batch, self.cfg
+        assert len(prompts) <= b
+        width = max(len(p) for p in prompts)
+        toks = np.zeros((b, width), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, -len(p):] = p
+        logits, self.cache = self.prefill(self.params, {"tokens": jnp.asarray(toks)})
+        self.last = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
+        self.done = np.arange(b) >= len(prompts)
+        self.budget = np.full(b, max_new, np.int32)
+        for i in range(len(prompts)):
+            self.outputs[i] = [int(self.last[i])]
+
+    def step(self) -> bool:
+        """One decode step for every live slot; returns whether any live."""
+        if self.decode is None:
+            raise RuntimeError("encoder-only model")
+        nxt, _, self.cache = self.decode(self.params, self.cache,
+                                         jnp.asarray(self.last[:, None]))
+        nxt = np.asarray(nxt)
+        self.budget -= 1
+        for i in range(self.sc.batch):
+            if not self.done[i]:
+                self.outputs[i].append(int(nxt[i]))
+                if self.budget[i] <= 0:
+                    self.done[i] = True
+        self.last = nxt
+        return bool((~self.done).any())
+
+    def run(self, prompts: List[np.ndarray], max_new: int = 16
+            ) -> List[List[int]]:
+        self.submit(prompts, max_new)
+        while self.step():
+            pass
+        return self.outputs[:len(prompts)]

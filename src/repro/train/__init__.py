@@ -1,0 +1,2 @@
+from .optimizer import AdamWConfig, adamw_init, adamw_update, opt_specs  # noqa: F401
+from .train_step import TrainConfig, make_train_step, make_train_state  # noqa: F401

@@ -1,0 +1,124 @@
+"""Manual data-parallel training with FatPaths-layered gradient sync.
+
+Under GSPMD-managed DP the gradient reduction happens inside autodiff, in
+the accumulation dtype, with XLA choosing the algorithm (measured in
+EXPERIMENTS.md §Perf: the `collective_dtype` knob is a no-op there).
+This module is the explicit alternative: the whole step runs in shard_map
+over the data axis — params replicated, batch sharded — and the gradient
+all-reduce is OURS:
+
+  * ``dist.collectives.multiring_all_reduce`` with ``n_rings`` stride
+    rings == the paper's layers (near-disjoint fabric paths);
+  * the wire dtype is under OUR control at the JAX level.  Measured
+    caveat (EXPERIMENTS.md §Perf): XLA:CPU hoists converts across
+    ppermute and runs bf16 rings in f32 — on TPU bf16 collective-permutes
+    are native, so the halving is real there; the int8+EF path as written
+    sums ring payloads in int32 (overflow-safe) — true sub-f32 wire for
+    it needs per-hop dequantisation schedules (future work);
+  * straggler/fault semantics: each ring is an independent ppermute
+    chain, so a slow link delays only its own flowlets (the fabric-model
+    measurements in bench_fabric quantify the spread).
+
+Intended for replicated-parameter (data-parallel-only) regimes — exactly
+where gradient wire compression matters most (small/medium models on many
+nodes).  Equivalence to the pjit step is tested on 8 host devices
+(tests/test_manual_dp.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.collectives import layer_strides, multiring_all_reduce
+from ..dist.sharding import P, Runtime
+from ..models import model as model_mod
+from ..models.common import dtype_of
+from ..models.config import ModelConfig
+from .optimizer import AdamWConfig, adamw_update
+
+__all__ = ["ManualDPConfig", "make_manual_dp_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ManualDPConfig:
+    opt: AdamWConfig = AdamWConfig()
+    n_rings: int = 4                 # FatPaths layers for the gradient AR
+    wire: str = "bfloat16"           # float32 | bfloat16 | int8_ef
+
+
+def make_manual_dp_step(cfg: ModelConfig, rt: Runtime,
+                        mc: Optional[ManualDPConfig] = None):
+    """(params, opt_state, ef, batch) -> (params, opt_state, ef, metrics).
+
+    ``ef`` is the error-feedback residual tree (zeros_like(params) f32);
+    pass it even for non-int8 wire (ignored).  rt.data_axes must span the
+    whole mesh (replicated params).
+    """
+    mc = mc or ManualDPConfig()
+    axis = rt.data_axes if len(rt.data_axes) > 1 else rt.data_axes[0]
+    # inside the manual region every array is device-local: the model's
+    # sharding constraints must no-op (mesh axes are 'manual' in here)
+    rt_local = Runtime(mesh=None)
+
+    def local_loss(params, micro):
+        loss, _ = model_mod.loss_fn(params, cfg, rt_local, micro)
+        return loss
+
+    def step(params, opt_state, ef, batch):
+        n = jax.lax.axis_size(axis)
+        strides = layer_strides(n, mc.n_rings)
+        loss, grads = jax.value_and_grad(local_loss)(params, batch)
+
+        def sync(g, r):
+            gf = g.astype(jnp.float32)
+            if mc.wire == "int8_ef":
+                gf = gf + r                      # carry-in residual
+                scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+                q = jnp.clip(jnp.round(gf / scale), -127, 127)
+                new_r = gf - q * scale           # local quantisation error
+                wire_val = q.astype(jnp.int8)
+                # rings sum int8 payloads in int32 to avoid overflow
+                summed = multiring_all_reduce(
+                    wire_val.astype(jnp.int32), axis, strides)
+                out = summed.astype(jnp.float32) * scale / n
+                return out, new_r
+            wire_dt = dtype_of(mc.wire) if mc.wire != "float32" \
+                else jnp.float32
+            summed = multiring_all_reduce(gf.astype(wire_dt), axis, strides)
+            return summed.astype(jnp.float32) / n, r
+
+        pairs = jax.tree.map(sync, grads, ef)
+        grads_g = jax.tree.map(lambda t: t[0], pairs,
+                               is_leaf=lambda t: isinstance(t, tuple))
+        new_ef = jax.tree.map(lambda t: t[1], pairs,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        new_params, new_opt, om = adamw_update(mc.opt, params, grads_g,
+                                               opt_state)
+        loss_g = jax.lax.pmean(loss, axis)
+        return new_params, new_opt, new_ef, {"loss": loss_g, **om}
+
+    if rt.mesh is None:
+        raise ValueError("manual DP needs a mesh")
+
+    rep = None  # replicated spec entry
+
+    def specs_like(tree):
+        return jax.tree.map(lambda x: P(*((rep,) * x.ndim)), tree)
+
+    def wrapped(params, opt_state, ef, batch):
+        in_specs = (specs_like(params), specs_like(opt_state),
+                    specs_like(ef),
+                    jax.tree.map(lambda x: P(rt.fsdp, *((None,) * (x.ndim - 1))),
+                                 batch))
+        out_specs = (specs_like(params), specs_like(opt_state),
+                     specs_like(ef), {"loss": P(), "lr": P(),
+                                      "grad_norm": P()})
+        return jax.shard_map(step, mesh=rt.mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)(
+            params, opt_state, ef, batch)
+
+    return wrapped

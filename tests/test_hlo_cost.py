@@ -1,0 +1,86 @@
+"""Loop-aware HLO cost model vs hand-counted ground truth."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_cost import module_cost, _shape_info
+
+
+def test_shape_info():
+    assert _shape_info("bf16[16,4096]{1,0}")[0] == 16 * 4096 * 2
+    b, n, dims = _shape_info("(s32[], f32[8,4])")
+    assert b == 4 + 8 * 4 * 4
+    assert n == 1 and dims == []
+
+
+def test_single_matmul():
+    a = jnp.zeros((512, 256), jnp.float32)
+    b = jnp.zeros((256, 128), jnp.float32)
+    c = jax.jit(lambda a, b: a @ b).lower(a, b).compile()
+    mc = module_cost(c.as_text())
+    assert mc.flops == 2 * 512 * 256 * 128
+    # ideal bytes: read A + B, write C
+    expect = (512 * 256 + 256 * 128 + 512 * 128) * 4
+    assert abs(mc.bytes_ideal - expect) / expect < 0.5
+
+
+def test_scan_multiplies_trip_count():
+    a = jnp.zeros((256, 256), jnp.float32)
+
+    def g(a):
+        def body(c, _):
+            return c @ a, None
+        out, _ = jax.lax.scan(body, a, None, length=11)
+        return out
+
+    mc = module_cost(jax.jit(g).lower(a).compile().as_text())
+    expect = 11 * 2 * 256 ** 3
+    assert abs(mc.flops - expect) / expect < 0.05, mc.flops
+
+
+def test_nested_scan():
+    a = jnp.zeros((128, 128), jnp.float32)
+
+    def g(a):
+        def outer(c, _):
+            def inner(d, _):
+                return d @ a, None
+            d, _ = jax.lax.scan(inner, c, None, length=3)
+            return d, None
+        out, _ = jax.lax.scan(outer, a, None, length=5)
+        return out
+
+    mc = module_cost(jax.jit(g).lower(a).compile().as_text())
+    expect = 5 * 3 * 2 * 128 ** 3
+    assert abs(mc.flops - expect) / expect < 0.05, mc.flops
+
+
+def test_transcendentals_counted():
+    x = jnp.zeros((1000,), jnp.float32)
+    mc = module_cost(jax.jit(jnp.tanh).lower(x).compile().as_text())
+    assert mc.transcendentals >= 1000
+
+
+def test_remat_increases_flops():
+    a = jnp.zeros((256, 256), jnp.float32)
+
+    def loss(w, x):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=8)
+        return jnp.sum(y)
+
+    plain = jax.jit(jax.grad(loss))
+    mc1 = module_cost(plain.lower(a, a).compile().as_text())
+
+    def loss_r(w, x):
+        @jax.checkpoint
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=8)
+        return jnp.sum(y)
+
+    mc2 = module_cost(jax.jit(jax.grad(loss_r)).lower(a, a).compile().as_text())
+    assert mc2.flops >= mc1.flops, "remat recompute must show up"

@@ -1,0 +1,96 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU).
+
+Per the task spec: shape/dtype sweeps with assert_allclose against ref.py.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gfmm import gf_matmul
+from repro.kernels.pathcount import pathcount_matmul
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 128, 384),
+                                   (128, 256, 128), (384, 384, 256)])
+def test_pathcount_shapes(m, k, n):
+    rng = np.random.default_rng(m + k + n)
+    a = jnp.asarray(rng.random((m, k), dtype=np.float32))
+    b = jnp.asarray(rng.random((k, n), dtype=np.float32))
+    out = pathcount_matmul(a, b, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.pathcount_ref(a, b)),
+                               rtol=1e-5)
+
+
+def test_pathcount_saturates():
+    a = jnp.full((128, 128), 1e30, jnp.float32)
+    out = pathcount_matmul(a, a, interpret=True)
+    assert np.isfinite(np.asarray(out)).all(), "saturating matmul must not inf"
+
+
+@pytest.mark.parametrize("m,k,n,p", [(128, 128, 128, 1009),
+                                     (256, 128, 128, 1009),
+                                     (128, 384, 256, 127)])
+def test_gfmm_shapes(m, k, n, p):
+    rng = np.random.default_rng(m * k + n)
+    a = jnp.asarray(rng.integers(0, p, (m, k)), dtype=jnp.int32)
+    b = jnp.asarray(rng.integers(0, p, (k, n)), dtype=jnp.int32)
+    out = gf_matmul(a, b, p=p, interpret=True)
+    expect = ref.gf_matmul_ref(a, b, p)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("b,h,hkv,s,d", [(1, 4, 4, 128, 64),
+                                         (2, 4, 2, 256, 64),
+                                         (1, 8, 1, 128, 128)])
+def test_flash_attention_gqa(b, h, hkv, s, d, causal):
+    rng = np.random.default_rng(h * s + d)
+    q = jnp.asarray(rng.standard_normal((b, h, s, d), dtype=np.float32))
+    k = jnp.asarray(rng.standard_normal((b, hkv, s, d), dtype=np.float32))
+    v = jnp.asarray(rng.standard_normal((b, hkv, s, d), dtype=np.float32))
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    expect = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("window", [32, 64])
+def test_flash_attention_window(window):
+    rng = np.random.default_rng(window)
+    q = jnp.asarray(rng.standard_normal((1, 2, 256, 64), dtype=np.float32))
+    out = flash_attention(q, q, q, causal=True, window=window, interpret=True)
+    expect = ref.attention_ref(q, q, q, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_softcap():
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.standard_normal((1, 2, 128, 64), dtype=np.float32))
+    out = flash_attention(q, q, q, causal=True, softcap=30.0, interpret=True)
+    expect = ref.attention_ref(q, q, q, causal=True, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), dtype=jnp.bfloat16)
+    out = flash_attention(q, q, q, causal=True, interpret=True)
+    expect = ref.attention_ref(q, q, q, causal=True)
+    np.testing.assert_allclose(np.asarray(out, dtype=np.float32),
+                               np.asarray(expect, dtype=np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_ops_wrappers():
+    """ops.py jit wrappers dispatch to interpret kernels on CPU."""
+    from repro.kernels import ops
+    adj = jnp.asarray(np.eye(128, k=1, dtype=np.float32))
+    out = ops.path_counts_power(adj, 3)
+    expect = np.linalg.matrix_power(np.asarray(adj), 3)
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-6)

@@ -1,0 +1,71 @@
+"""Shortest paths / path counting vs. networkx ground truth (Appendix B.1)."""
+
+import networkx as nx
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import paths as P
+
+
+def _random_graph(n, p, seed):
+    g = nx.gnp_random_graph(n, p, seed=seed)
+    adj = np.zeros((n, n), dtype=bool)
+    for u, v in g.edges:
+        adj[u, v] = adj[v, u] = True
+    return adj, g
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(8, 24), st.integers(0, 10_000))
+def test_shortest_path_lengths_match_networkx(n, seed):
+    adj, g = _random_graph(n, 0.25, seed)
+    dist = np.asarray(P.shortest_path_lengths(jnp.asarray(adj), max_l=n))
+    nxd = dict(nx.all_pairs_shortest_path_length(g))
+    for s in range(n):
+        for t in range(n):
+            expect = nxd.get(s, {}).get(t)
+            if s == t:
+                assert dist[s, t] == 0
+            elif expect is None:
+                assert dist[s, t] > n, "unreachable must exceed max_l"
+            else:
+                assert dist[s, t] == expect
+
+
+def test_path_counts_exact_length():
+    """A^l entries == number of length-l walks (Theorem 1)."""
+    adj = np.array([[0, 1, 1, 0],
+                    [1, 0, 1, 0],
+                    [1, 1, 0, 1],
+                    [0, 0, 1, 0]], dtype=bool)
+    a = adj.astype(np.float64)
+    for l in (1, 2, 3, 4):
+        counts = np.asarray(P.path_counts_exact_length(jnp.asarray(adj), l))
+        np.testing.assert_allclose(counts, np.linalg.matrix_power(a, l))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(8, 20), st.integers(0, 10_000))
+def test_forwarding_reaches_destination(n, seed):
+    adj, g = _random_graph(n, 0.3, seed)
+    nh = P.build_forwarding(adj, seed=seed)
+    dist = np.asarray(P.shortest_path_lengths(jnp.asarray(adj), max_l=n))
+    ss, tt = np.nonzero((dist > 0) & (dist <= n))
+    if len(ss) == 0:
+        return
+    walked = P.walk_paths(nh, ss, tt, max_hops=n + 1)
+    assert (walked[:, -1] == tt).all(), "every reachable pair is routed"
+    # hop count equals shortest distance (minimal-path forwarding)
+    hops = (walked[:, :-1] != walked[:, 1:]).sum(axis=1)
+    np.testing.assert_array_equal(hops, dist[ss, tt])
+
+
+def test_min_path_stats_sf(sf5):
+    """Paper Fig 6: in SF most pairs have exactly one minimal path."""
+    dist, counts = P.min_path_stats(np.asarray(sf5.adj))
+    d2 = counts[dist == 2]
+    assert (d2 == 1).mean() > 0.5
+    assert (counts[dist == 1] == 1).all()

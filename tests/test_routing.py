@@ -1,0 +1,70 @@
+"""Forwarding functions + deployment accounting (paper §5.1, §5.4, §5.5)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import layers as L
+from repro.core import routing as R
+from repro.core.topology import slim_fly
+
+
+@pytest.fixture(scope="module")
+def lr():
+    return L.build_layers(slim_fly(5), n_layers=5, rho=0.6, seed=0)
+
+
+def test_forwarding_function_routes(lr):
+    ff = R.ForwardingFunction(lr, layer=0)
+    path = ff.route(0, 37)
+    assert path[0] == 0 and path[-1] == 37
+    assert len(path) <= 3, "SF D=2: minimal layer routes in <=2 hops"
+    port, nxt = ff(0, 37)
+    assert 0 <= port < lr.topo.network_radix
+    assert nxt == path[1]
+
+
+def test_forwarding_unroutable_raises(lr):
+    for i in range(1, lr.n_layers):
+        s, t = np.argwhere(~lr.reach[i])[0]
+        if s != t:
+            ff = R.ForwardingFunction(lr, layer=int(i))
+            with pytest.raises(LookupError):
+                ff.route(int(s), int(t))
+            return
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 49), st.integers(0, 49), st.integers(0, 4))
+def test_port_next_hop_consistency(s, t, layer):
+    lrr = test_port_next_hop_consistency._lr
+    if s == t or not lrr.reach[layer, s, t]:
+        return
+    ff = R.ForwardingFunction(lrr, layer=layer)
+    port, nxt = ff(s, t)
+    # the port must point at an actual neighbour, and nh must be a neighbour
+    assert lrr.topo.adj[s, nxt]
+    nbrs = np.nonzero(lrr.topo.adj[s])[0]
+    assert nbrs[port] == nxt
+
+
+test_port_next_hop_consistency._lr = L.build_layers(
+    slim_fly(5), n_layers=5, rho=0.6, seed=0)
+
+
+def test_table_size_compression(lr):
+    """§5.5.2: prefix tables are O(N_r) per router vs O(N) exact — for SF
+    with p=4 endpoints/router the saving is p^2 x at the network level."""
+    exact = R.table_entries_exact(lr)
+    prefix = R.table_entries_prefix(lr)
+    n, n_r = lr.topo.n_endpoints, lr.topo.n_routers
+    assert exact == n_r * lr.n_layers * n
+    assert prefix == n_r * lr.n_layers * n_r
+    assert prefix * (n // n_r) == exact
+
+
+def test_vlan_budget(lr):
+    """FatPaths needs O(1) VLANs (one per layer) — far below the 4094
+    hardware limit the paper discusses; SPAIN-style tree layering needs
+    O(k') or more."""
+    assert R.vlan_layers_required(lr) == 5 < 4094

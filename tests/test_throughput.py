@@ -1,0 +1,41 @@
+"""Maximum achievable throughput via the layered MCF LP (paper §6.4)."""
+
+import numpy as np
+import pytest
+
+from repro.core import layers as L
+from repro.core import throughput as TH
+from repro.core import traffic as TR
+from repro.core.topology import clique, slim_fly
+
+
+def test_clique_minimal_vs_layered():
+    """D=1 clique: minimal routing has exactly ONE path per pair, so
+    colliding permutation flows bound T at 1/max_collisions; sparse layers
+    add 2-hop detours and lift T (paper §4.1: D=1 demands high diversity —
+    the VLB effect)."""
+    topo = clique(8)
+    wl = TR.make_workload(topo, "permutation", seed=0)
+    minimal = TH.mat_lp(L.build_layers(topo, 2, 1.0, seed=0), wl)
+    layered = TH.mat_lp(L.build_layers(topo, 9, 0.7, seed=0), wl)
+    assert minimal.throughput <= 1.0
+    assert layered.throughput > minimal.throughput, "layers lift D=1 MAT"
+    assert layered.throughput >= 0.45, layered
+
+
+def test_layered_geq_single_layer(sf5):
+    lr = L.build_layers(sf5, n_layers=5, rho=0.6, seed=0)
+    wl = TR.make_workload(sf5, "adversarial", seed=1)
+    multi = TH.mat_lp(lr, wl)
+    single = TH.mat_single_layer(lr, wl)
+    assert multi.throughput >= single.throughput - 1e-6, \
+        "more layers can only help the MCF"
+
+
+def test_worst_case_lower_than_permutation(sf5):
+    lr = L.build_layers(sf5, n_layers=5, rho=0.6, seed=0)
+    wl_p = TR.make_workload(sf5, "permutation", seed=0)
+    wl_w = TR.make_workload(sf5, "worstcase", seed=0)
+    tp = TH.mat_lp(lr, wl_p).throughput
+    tw = TH.mat_lp(lr, wl_w).throughput
+    assert tw <= tp + 1e-6, "worst-case pattern must not beat permutation"

@@ -1,0 +1,99 @@
+"""Topology construction invariants (paper §2.2, Appendix A)."""
+
+import numpy as np
+import pytest
+
+from repro.core import topology as T
+
+
+ALL = [
+    ("slim_fly", lambda: T.slim_fly(5)),
+    ("dragonfly", lambda: T.dragonfly(3)),
+    ("jellyfish", lambda: T.jellyfish(60, 8, 4, seed=1)),
+    ("xpander", lambda: T.xpander(8)),
+    ("hyperx2", lambda: T.hyperx(2, 6)),
+    ("hyperx3", lambda: T.hyperx(3, 4)),
+    ("fat_tree", lambda: T.fat_tree(8)),
+    ("clique", lambda: T.clique(12)),
+    ("star", lambda: T.star(24)),
+]
+
+
+@pytest.mark.parametrize("name,make", ALL)
+def test_valid_and_symmetric(name, make):
+    topo = make()
+    topo.validate()
+    adj = np.asarray(topo.adj)
+    assert (adj == adj.T).all(), "links are full-duplex/undirected"
+    assert not adj.diagonal().any(), "no self-links"
+    assert topo.n_endpoints == int(np.sum(topo.concentration))
+
+
+def test_slim_fly_structure():
+    """MMS graph for prime q: N_r = 2q^2, k' = (3q - delta)/2."""
+    for q in (5, 7, 11):
+        sf = T.slim_fly(q)
+        assert sf.n_routers == 2 * q * q
+        deg = np.asarray(sf.adj).sum(axis=1)
+        assert deg.min() == deg.max(), "SF is regular"
+        from repro.core.paths import diameter
+        assert diameter(np.asarray(sf.adj)) == 2
+
+
+def test_dragonfly_balanced():
+    """Balanced DF: a = 2p = 2h, g = ah + 1 groups, one global link/pair."""
+    p = 4
+    df = T.dragonfly(p)
+    a, h = 2 * p, p
+    g = a * h + 1
+    assert df.n_routers == a * g
+    deg = np.asarray(df.adj).sum(axis=1)
+    assert deg.max() == (a - 1) + h
+    from repro.core.paths import diameter
+    assert diameter(np.asarray(df.adj)) == 3
+
+
+def test_xpander_regular():
+    xp = T.xpander(8)
+    deg = np.asarray(xp.adj).sum(axis=1)
+    assert deg.min() == deg.max() == 8
+
+
+def test_hyperx_structure():
+    hx = T.hyperx(2, 5)
+    assert hx.n_routers == 25
+    deg = np.asarray(hx.adj).sum(axis=1)
+    assert deg.min() == deg.max() == 2 * 4
+    from repro.core.paths import diameter
+    assert diameter(np.asarray(hx.adj)) == 2
+
+
+def test_fat_tree_structure():
+    """3-stage FT from radix-k routers: 5k^2/4 routers, k^3/4 endpoints."""
+    k = 8
+    ft = T.fat_tree(k)
+    assert ft.n_routers == 5 * k * k // 4
+    assert ft.n_endpoints == k ** 3 // 4
+    from repro.core.paths import diameter
+    assert diameter(np.asarray(ft.adj)) == 4
+
+
+def test_equivalent_jellyfish_same_hardware():
+    sf = T.slim_fly(5)
+    jf = T.equivalent_jellyfish(sf, seed=0)
+    assert jf.n_routers == sf.n_routers
+    assert np.asarray(jf.adj).sum() <= np.asarray(sf.adj).sum()
+    assert jf.n_endpoints == sf.n_endpoints
+
+
+def test_edge_density_constant(sf5):
+    """Paper Fig 10: cables/endpoints is O(1); SF ~ 1.7 for p = ceil(k'/2)."""
+    d = sf5.edge_density
+    assert 1.0 < d < 3.0
+
+
+def test_by_name_dispatch():
+    topo = T.by_name("sf:5")
+    assert topo.n_routers == 50
+    with pytest.raises((KeyError, ValueError)):
+        T.by_name("nope:1")

@@ -1,0 +1,113 @@
+"""Flow-level transport simulator behaviour (paper §3.3, §7)."""
+
+import numpy as np
+import pytest
+
+from repro.core import layers as L
+from repro.core import traffic as TR
+from repro.core import transport as TP
+from repro.core.topology import slim_fly, star
+
+
+@pytest.fixture(scope="module")
+def setup():
+    topo = slim_fly(5)
+    lr = L.build_layers(topo, n_layers=5, rho=0.6, seed=0)
+    ecmp = TP.ecmp_routing(topo, n_tables=4, seed=0)
+    return topo, lr, ecmp
+
+
+def test_conservation_and_completion(setup):
+    topo, lr, _ = setup
+    wl = TR.make_workload(topo, "permutation", seed=1)
+    res = TP.simulate(topo, lr, wl, TP.SimConfig(n_steps=800))
+    assert (res.delivered <= res.size + 1e-3).all(), "no over-delivery"
+    assert res.fct_stats()["finished"] > 0.95
+    ok = res.finished
+    assert np.isfinite(res.fct[ok]).all()
+    # FCT at least the latency floor (sw latency + >=0 hops)
+    assert (res.fct[ok] >= res.config.sw_latency - 1e-9).all()
+
+
+def test_ndp_beats_tcp_slow_start(setup):
+    """Purified transport starts at line rate: short flows finish faster
+    than TCP's slow-start ramp (paper §3.3 / §7.3)."""
+    topo, lr, _ = setup
+    wl = TR.make_workload(topo, "permutation", seed=2, flow_size=256 * 1024)
+    ndp = TP.simulate(topo, lr, wl, TP.SimConfig(transport="ndp", n_steps=600))
+    tcp = TP.simulate(topo, lr, wl, TP.SimConfig(transport="tcp", n_steps=600))
+    assert ndp.fct_stats()["p50"] < tcp.fct_stats()["p50"]
+
+
+def test_fatpaths_resolves_collisions_ecmp_cannot(setup):
+    """Paper Fig 5 + §4.1 in one microcase: all endpoints of router A send
+    to router B (distance 2).  SF has exactly ONE minimal A->B path, so
+    ECMP *and* LetFlow stack every flow onto it; FatPaths spreads flowlets
+    over non-minimal layers => ~2x faster completion.  This is the paper's
+    thesis in miniature."""
+    import jax.numpy as jnp
+    from repro.core import paths as P
+    topo, _, ecmp = setup
+    lr9 = L.build_layers(topo, n_layers=9, rho=0.6, seed=0)
+    ep2r = TR.endpoint_router_map(topo)
+    dist = np.asarray(P.shortest_path_lengths(
+        jnp.asarray(np.asarray(topo.adj, bool)), max_l=8))
+    A, B = next((a, b) for a in range(topo.n_routers)
+                for b in range(topo.n_routers) if dist[a, b] == 2)
+    src = np.concatenate([np.where(ep2r == A)[0]] * 4)
+    dst = np.tile(np.where(ep2r == B)[0], 4)
+    wl = TR.FlowWorkload(
+        src=src.astype(np.int32), dst=dst.astype(np.int32),
+        size=np.full(len(src), 4 * 2 ** 20), start=np.zeros(len(src)),
+        src_router=ep2r[src].astype(np.int32),
+        dst_router=ep2r[dst].astype(np.int32))
+    stats = {}
+    for name, routing, bal in [("fp", lr9, "fatpaths"),
+                               ("ecmp", ecmp, "ecmp"),
+                               ("letflow", ecmp, "letflow")]:
+        res = TP.simulate(topo, routing, wl,
+                          TP.SimConfig(balancing=bal, n_steps=4000))
+        stats[name] = res.fct_stats()
+    assert stats["fp"]["finished"] == 1.0
+    # minimal-path multipathing is useless here (one minimal path):
+    np.testing.assert_allclose(stats["letflow"]["p50"],
+                               stats["ecmp"]["p50"], rtol=0.05)
+    # non-minimal layers give ~2x:
+    assert stats["fp"]["p50"] < 0.65 * stats["ecmp"]["p50"], stats
+
+
+def test_fatpaths_noninferior_on_randomized(setup):
+    """§3.4-randomised traffic is the easy case; FatPaths must not lose to
+    minimal ECMP there (paper: 'highest performance in such cases as
+    well')."""
+    topo, lr, ecmp = setup
+    wl = TR.make_workload(topo, "adversarial", seed=3)
+    fp = TP.simulate(topo, lr, wl, TP.SimConfig(balancing="fatpaths",
+                                                n_steps=1200))
+    ec = TP.simulate(topo, ecmp, wl, TP.SimConfig(balancing="ecmp",
+                                                  n_steps=1200))
+    f_fp, f_ec = fp.fct_stats(), ec.fct_stats()
+    assert f_fp["finished"] >= f_ec["finished"] - 1e-9
+    assert f_fp["p99"] <= f_ec["p99"] * 1.25, (f_fp, f_ec)
+
+
+def test_star_is_topology_free_baseline():
+    """§7.1.6: the crossbar star shows pure endpoint contention."""
+    topo = star(24)
+    lr = TP.ecmp_routing(topo, n_tables=1)
+    wl = TR.make_workload(topo, "permutation", seed=0)
+    res = TP.simulate(topo, lr, wl, TP.SimConfig(n_steps=600,
+                                                 balancing="ecmp"))
+    st = res.fct_stats()
+    assert st["finished"] == 1.0
+    # permutation on a crossbar: no sharing -> tight FCT distribution
+    assert st["p99"] <= st["p50"] * 3
+
+
+def test_flowlet_rerolls_under_congestion(setup):
+    """All-to-one incast: fatpaths' flowlet elasticity must keep finishing
+    flows (re-rolling layers), even if slowly."""
+    topo, lr, _ = setup
+    wl = TR.make_workload(topo, "alltoone", seed=1, flow_size=64 * 1024)
+    res = TP.simulate(topo, lr, wl, TP.SimConfig(n_steps=1500))
+    assert res.fct_stats()["finished"] > 0.5
