@@ -1,13 +1,16 @@
 """Benchmark aggregator: one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME] \\
+      [--json PATH]
 
-Emits ``name,us_per_call,derived`` CSV lines per benchmark.
+Emits ``name,us_per_call,derived`` CSV lines per benchmark; ``--json``
+additionally dumps ``{name: us_per_call}`` for the perf trajectory.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -21,6 +24,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", default="",
+                    help="dump {name: us_per_call} to this path")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -37,6 +42,11 @@ def main() -> None:
             failures.append((mod_name, repr(e)))
             traceback.print_exc()
         print(f"# {mod_name} done in {time.time() - t0:.1f}s", flush=True)
+    if args.json:
+        from benchmarks.common import ROWS
+        with open(args.json, "w") as f:
+            json.dump({name: us for name, us, _ in ROWS}, f, indent=1)
+        print(f"# wrote {len(ROWS)} rows to {args.json}", flush=True)
     if failures:
         for f in failures:
             print("FAILED:", f, file=sys.stderr)

@@ -6,13 +6,16 @@ The paper's primary contribution as a composable JAX library:
 * :mod:`repro.core.paths`      — adjacency-algebra path analysis (Appendix B.1).
 * :mod:`repro.core.diversity`  — CDP / PI / TNL metrics (§4.2, Appendix B.3).
 * :mod:`repro.core.layers`     — FatPaths layered routing (§5.2–5.4).
+* :mod:`repro.core.routing`    — forwarding functions + table accounting (§5.1, §5.5).
 * :mod:`repro.core.traffic`    — traffic patterns (§2.4).
 * :mod:`repro.core.transport`  — flow-level purified-transport simulator (§7).
 * :mod:`repro.core.throughput` — MAT multicommodity-flow LP (§6.4).
 """
 
-from . import diversity, layers, paths, throughput, topology, traffic, transport  # noqa: F401
+from . import (diversity, layers, paths, routing, throughput, topology,  # noqa: F401
+               traffic, transport)
 from .layers import LayeredRouting, build_layers  # noqa: F401
+from .routing import ForwardingFunction  # noqa: F401
 from .topology import Topology, by_name  # noqa: F401
 from .traffic import FlowWorkload, make_workload  # noqa: F401
 from .transport import SimConfig, SimResult, ecmp_routing, simulate  # noqa: F401

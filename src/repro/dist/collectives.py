@@ -1,0 +1,168 @@
+"""FatPaths-layered collective schedules as ppermute programs.
+
+The paper spreads one logical flow over several near-disjoint routing
+layers; the collective analogue runs one ring all-reduce per *stride
+ring*: ring ``r`` visits the devices in order ``0, s_r, 2 s_r, ...``
+(mod n), which on a fabric with FatPaths layers maps each ring onto a
+different set of links.  Each ring moves ``1/R`` of the payload through
+the classic reduce-scatter + all-gather schedule, so the total wire bytes
+match a single ring exactly while the per-link load spreads R ways
+(quantified against modelled fabrics in :mod:`repro.dist.fabric` and
+``benchmarks/bench_fabric``).
+
+All functions run inside ``shard_map`` over a named axis (or axis tuple).
+Strides must be coprime with the axis size for a ring to visit every
+device — :func:`layer_strides` generates such strides.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "layer_strides",
+    "ring_reduce_scatter",
+    "ring_all_gather",
+    "multiring_all_reduce",
+]
+
+
+def layer_strides(n: int, k: int) -> Tuple[int, ...]:
+    """The first ``k`` positive ring strides coprime with ``n``.
+
+    ``layer_strides(16, 3) == (1, 3, 5)``.  Every returned stride
+    generates a Hamiltonian ring on n devices (gcd(s, n) == 1) — the
+    software twin of the paper's routing layers.  The first
+    ``phi(n)`` rings traverse distinct neighbour patterns; only when
+    ``k`` exceeds the number of coprime residues (pigeonhole) do rings
+    repeat a pattern mod n, and the payload still splits k ways.
+    """
+    if n <= 1:
+        return (1,) * k
+    out = []
+    s = 1
+    while len(out) < k:
+        if math.gcd(s, n) == 1:
+            out.append(s)
+        s += 1
+    return tuple(out)
+
+
+def _check_stride(stride: int, n: int) -> None:
+    """A non-coprime stride decomposes the ring into gcd(s, n) disjoint
+    cycles and would silently drop contributions — fail at trace time."""
+    if math.gcd(stride, n) != 1:
+        raise ValueError(f"ring stride {stride} is not coprime with axis "
+                         f"size {n} (use layer_strides)")
+
+
+def _chunk(buf, idx):
+    """buf: (n, m); idx: traced chunk index -> (m,)."""
+    return jax.lax.dynamic_index_in_dim(buf, idx, axis=0, keepdims=False)
+
+
+def ring_reduce_scatter(x, axis, stride: int):
+    """Ring reduce-scatter over ``axis`` with the given stride.
+
+    Flattens ``x`` (padding with zeros to a multiple of n) and runs the
+    classic n-1-step ring schedule along the ring ``i -> (i + stride) %
+    n``.  Returns the fully reduced chunk owned by this device: chunk
+    index ``(i + stride) % n`` of the flattened payload — pass
+    ``chunk_offset=stride`` to :func:`ring_all_gather` to reassemble.
+    """
+    n = jax.lax.axis_size(axis)
+    flat = x.reshape(-1)
+    if n == 1:
+        return flat
+    _check_stride(stride, n)
+    m0 = flat.shape[0]
+    m = -(-m0 // n) * n
+    if m != m0:
+        flat = jnp.concatenate([flat, jnp.zeros((m - m0,), flat.dtype)])
+    chunks = flat.reshape(n, m // n)
+    i = _ring_index(axis)
+    perm = [(j, (j + stride) % n) for j in range(n)]
+    # step k: send the running chunk (i - k*s) to the ring successor,
+    # receive chunk (i - (k+1)*s) and fold in the local copy.
+    cur = _chunk(chunks, i)
+    for k in range(1, n):
+        recv = jax.lax.ppermute(cur, axis, perm)
+        cur = _chunk(chunks, (i - k * stride) % n) + recv
+    return cur
+
+
+def ring_all_gather(x, axis, stride: int, chunk_offset: int = 0):
+    """Ring all-gather over ``axis`` with the given stride.
+
+    ``x`` is this device's chunk; device ``i`` is assumed to hold chunk
+    index ``(i + chunk_offset) % n``.  Returns the flat concatenation of
+    all n chunks in chunk-index order (identical on every device), via
+    n-1 ppermute steps along the same ring as the reduce-scatter.
+    """
+    n = jax.lax.axis_size(axis)
+    chunk = x.reshape(-1)
+    if n == 1:
+        return chunk
+    _check_stride(stride, n)
+    m = chunk.shape[0]
+    i = _ring_index(axis)
+    perm = [(j, (j + stride) % n) for j in range(n)]
+    out = jnp.zeros((n, m), chunk.dtype)
+    cur = chunk
+    out = jax.lax.dynamic_update_slice_in_dim(
+        out, cur[None], (i + chunk_offset) % n, axis=0)
+    for k in range(1, n):
+        cur = jax.lax.ppermute(cur, axis, perm)
+        # the chunk arriving at step k originated k ring-hops upstream
+        out = jax.lax.dynamic_update_slice_in_dim(
+            out, cur[None], (i - k * stride + chunk_offset) % n, axis=0)
+    return out.reshape(-1)
+
+
+def multiring_all_reduce(x, axis, strides: Sequence[int]):
+    """All-reduce (sum) via R independent stride rings — numerically equal
+    to ``psum(x, axis)``; emits one collective-permute chain of 2(n-1)
+    steps per ring.
+
+    The payload is split R ways; ring r reduce-scatters + all-gathers its
+    slice along the ring ``i -> (i + strides[r]) % n``.  Works for any
+    dtype with well-defined addition (f32/bf16 gradients, int32 payloads
+    of the int8 error-feedback wire).
+    """
+    strides = tuple(strides)
+    if not strides:
+        raise ValueError("need at least one stride")
+    n = jax.lax.axis_size(axis)
+    if n == 1:
+        return x
+    r = len(strides)
+    flat = x.reshape(-1)
+    m0 = flat.shape[0]
+    per = -(-m0 // (n * r)) * n          # per-ring slice, divisible by n
+    if per * r != m0:
+        flat = jnp.concatenate(
+            [flat, jnp.zeros((per * r - m0,), flat.dtype)])
+    # interleave the payload across rings (element e rides ring e % r): all
+    # rings carry real data even when padding was needed, so the per-ring
+    # link load stays balanced and no ring degenerates to a constant that
+    # XLA would fold away.
+    parts = flat.reshape(per, r)
+    outs = []
+    for ri, s in enumerate(strides):
+        reduced = ring_reduce_scatter(parts[:, ri], axis, s)
+        outs.append(ring_all_gather(reduced, axis, s, chunk_offset=s))
+    return jnp.stack(outs, axis=1).reshape(-1)[:m0].reshape(x.shape)
+
+
+def _ring_index(axis):
+    """Linear device index along ``axis`` (row-major over an axis tuple)."""
+    if isinstance(axis, (tuple, list)):
+        idx = jnp.int32(0)
+        for a in axis:
+            idx = idx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+        return idx
+    return jax.lax.axis_index(axis)

@@ -40,29 +40,29 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str],
     return Mesh(devs.reshape(tuple(shape)), tuple(axes))
 
 
-def fatpaths_device_order(n_devices: int, topo=None, seed: int = 0) -> np.ndarray:
+def fatpaths_device_order(n_devices: int, topo=None) -> np.ndarray:
     """Order devices so consecutive mesh coordinates sit on fabric-adjacent
     endpoints: BFS order over the cluster topology's routers (endpoints of a
-    router stay contiguous).  Identity when no topology is given."""
+    router stay contiguous).  Deterministic; identity when no topology is
+    given."""
     if topo is None:
         return np.arange(n_devices)
-    from ..core import paths as paths_mod
-    import jax.numpy as jnp
+    from collections import deque
 
     adj = topo.adj
     n_r = adj.shape[0]
     # BFS from router 0 for a locality-preserving linearisation.
     order = []
     seen = np.zeros(n_r, dtype=bool)
-    stack = [0]
+    queue = deque([0])
     seen[0] = True
-    while stack:
-        v = stack.pop(0)
+    while queue:
+        v = queue.popleft()
         order.append(v)
         for u in np.nonzero(adj[v])[0]:
             if not seen[u]:
                 seen[u] = True
-                stack.append(u)
+                queue.append(u)
     order += [i for i in range(n_r) if not seen[i]]
     ep_order = []
     conc = topo.concentration
@@ -70,7 +70,12 @@ def fatpaths_device_order(n_devices: int, topo=None, seed: int = 0) -> np.ndarra
     for r in order:
         ep_order.extend(range(int(base[r]), int(base[r] + conc[r])))
     ep_order = np.array(ep_order)
+    # Restrict to a permutation of range(n_devices): keep the BFS order of
+    # the endpoints that map to devices, then append any device ids beyond
+    # the modelled endpoint count in natural order.
+    ep_order = ep_order[ep_order < n_devices]
     if len(ep_order) < n_devices:
-        reps = -(-n_devices // len(ep_order))
-        ep_order = np.concatenate([ep_order + i * len(ep_order) for i in range(reps)])
-    return ep_order[:n_devices] % n_devices
+        present = np.zeros(n_devices, dtype=bool)
+        present[ep_order] = True
+        ep_order = np.concatenate([ep_order, np.nonzero(~present)[0]])
+    return ep_order

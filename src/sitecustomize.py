@@ -1,0 +1,46 @@
+"""Environment guard for stripped-env subprocesses (tests, dry-run).
+
+Imported automatically by :mod:`site` whenever ``src/`` is on
+``PYTHONPATH`` — which is exactly how the multi-device test subprocesses
+and the dry-run launch python.  Forcing host-platform devices is a
+CPU-only debugging mode, so pin the jax platform before jax can
+initialize: a machine with libtpu installed but no TPU attached
+otherwise spends minutes probing the TPU backend before falling back to
+CPU (measured ~4m40s here, blowing the tests' subprocess budgets).
+
+``repro.dist.compat.install()`` applies the same pin for processes that
+import the library after jax; this hook covers the ones that never
+import :mod:`repro.dist` at all.
+
+Python imports only the first ``sitecustomize`` on ``sys.path``, so
+after the guard this module chain-loads any sitecustomize it shadows
+(virtualenv/distro hooks keep working with ``src`` on ``PYTHONPATH``).
+"""
+
+import os
+import sys
+
+if ("--xla_force_host_platform_device_count"
+        in os.environ.get("XLA_FLAGS", "")):
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+def _chain_shadowed_sitecustomize():
+    here = os.path.dirname(os.path.abspath(__file__))
+    for p in sys.path:
+        full = os.path.abspath(p or ".")
+        if full == here:
+            continue
+        cand = os.path.join(full, "sitecustomize.py")
+        if os.path.isfile(cand):
+            import runpy
+            runpy.run_path(cand, run_name="sitecustomize")
+            break
+
+
+try:
+    _chain_shadowed_sitecustomize()
+except Exception:
+    pass  # an import hook must never break interpreter startup
+finally:
+    del _chain_shadowed_sitecustomize

@@ -1,0 +1,77 @@
+"""Runtime layout contract: single-device no-ops + tp_disabled folding.
+
+The mesh=None half runs in-process on the real single CPU device; the
+tp_disabled half needs an 8-device mesh and follows the subprocess
+pattern of test_collectives.py.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+
+from repro.dist.sharding import P, Runtime
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+
+
+def test_mesh_none_helpers_are_noops():
+    rt = Runtime(mesh=None)
+    assert rt.tp_size == 1 and rt.fsdp_size == 1
+    assert not rt.tp
+    assert rt.fsdp is None
+    # spec builders resolve every logical entry to replicated
+    assert rt.spec("fsdp", None) == P(None, None)
+    assert rt.spec_div(("fsdp", "tp", None), (4, 6, 8)) == P(None, None, None)
+    # placement helpers are identity (no constraint inserted, same object)
+    x = jnp.ones((4, 6))
+    assert rt.shard(x, "fsdp", "tp") is x
+    assert rt.shard_spec(x, P(None, None)) is x
+    assert rt.tree_sharding({"w": P(None)}) is None
+    fn = lambda v: v  # noqa: E731
+    assert rt.shard_map(fn, in_specs=P(), out_specs=P()) is fn
+
+
+def test_astype_uses_collective_dtype():
+    rt = Runtime(mesh=None, collective_dtype="bfloat16")
+    assert rt.astype(jnp.ones((2,), jnp.float32)).dtype == jnp.bfloat16
+    rt32 = Runtime(mesh=None, collective_dtype="float32")
+    assert rt32.astype(jnp.ones((2,), jnp.bfloat16)).dtype == jnp.float32
+
+
+_PROG = textwrap.dedent("""
+    import jax
+    from repro.dist.sharding import P, Runtime
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+
+    rt = Runtime(mesh=mesh, data_axes=("data",))
+    assert rt.tp == "model" and rt.tp_size == 4 and rt.fsdp_size == 2
+    assert rt.spec_div(("fsdp", "tp"), (16, 8)) == P("data", "model")
+    # divide-or-replicate: 6 % 4 != 0 drops the tp entry
+    assert rt.spec_div(("fsdp", "tp"), (16, 6)) == P("data", None)
+
+    # tp_disabled folds the model axis into the data axes whether or not
+    # the caller lists it explicitly
+    for axes in (("data",), ("data", "model")):
+        fs = Runtime(mesh=mesh, data_axes=axes, tp_disabled=True)
+        assert fs.tp == False, fs.tp
+        assert fs.tp_size == 1
+        assert fs.fsdp_size == 8, fs.fsdp_size
+        assert fs.fsdp_axes == ("data", "model")
+        assert fs.spec_div(("fsdp", "tp"), (16, 8)) == \\
+            P(("data", "model"), None)
+    print("SHARDING_OK")
+""")
+
+
+def test_tp_disabled_folds_model_axis_into_fsdp():
+    r = subprocess.run(
+        [sys.executable, "-c", _PROG],
+        capture_output=True, text=True, timeout=300,
+        env={"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+             "PYTHONPATH": _SRC, "PATH": "/usr/bin:/bin"})
+    assert "SHARDING_OK" in r.stdout, r.stderr[-2000:]
