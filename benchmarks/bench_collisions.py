@@ -9,17 +9,12 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import topology as T
-from repro.core import traffic as TR
-
-from .common import emit, timeit
+from .common import emit, get_session, timeit
 
 
-def collision_histogram(topo, pattern: str, n_rounds: int = 1,
-                        seed: int = 0) -> np.ndarray:
+def collision_histogram(wl) -> np.ndarray:
     """Count flows per (src_router, dst_router) pair (a 'collision' is >1
     flow on the same pair — they share every minimal path, Fig 5 left)."""
-    wl = TR.make_workload(topo, pattern, n_rounds=n_rounds, seed=seed)
     pairs = {}
     for s, t in zip(wl.src_router, wl.dst_router):
         pairs[(int(s), int(t))] = pairs.get((int(s), int(t)), 0) + 1
@@ -27,24 +22,23 @@ def collision_histogram(topo, pattern: str, n_rounds: int = 1,
 
 
 def main(quick: bool = False) -> None:
-    cases = [
-        (T.slim_fly(5), "SF(D=2)"),
-        (T.dragonfly(3), "DF(D=3)"),
-        (T.clique(12), "clique(D=1)"),
-    ]
-    for topo, label in cases:
-        for pattern, rounds in (("permutation", 1), ("stencil", 1),
-                                ("permutation", 4)):
-            us = timeit(lambda: collision_histogram(topo, pattern, rounds),
-                        n=1)
-            h = collision_histogram(topo, pattern, rounds)
+    session = get_session()
+    cases = [("sf(q=5)", "SF(D=2)"), ("df(p=3)", "DF(D=3)"),
+             ("clique(k=12)", "clique(D=1)")]
+    patterns = ["permutation", "stencil", "permutation(rounds=4)"]
+    for tspec, label in cases:
+        for pspec in patterns:
+            us = timeit(
+                lambda: collision_histogram(session.workload(tspec, pspec,
+                                                             seed=0)))
+            h = collision_histogram(session.workload(tspec, pspec, seed=0))
             p99 = 1
             cum = np.cumsum(h) / max(h.sum(), 1)
             for k, c in enumerate(cum):
                 if c >= 0.99:
                     p99 = k
                     break
-            emit(f"fig4/{label}/{pattern}x{rounds}", us,
+            emit(f"fig4/{label}/{pspec}", us,
                  f"p99_collisions={p99} max={len(h) - 1}")
 
 

@@ -14,26 +14,28 @@ import numpy as np
 from repro.core import diversity as DV
 from repro.core import paths as P
 
-from .common import emit, small_topologies, timeit
+from .common import SMALL_TOPOS_JF, emit, get_session, timeit
 
 
 def main(quick: bool = False) -> None:
+    session = get_session()
     n_cdp = 30 if quick else 80
     n_pi = 10 if quick else 30
-    for topo in small_topologies():
+    for tspec in SMALL_TOPOS_JF:
+        topo = session.topology(tspec)
         dist, counts = P.min_path_stats(np.asarray(topo.adj))
         off = ~np.eye(topo.n_routers, dtype=bool)
         reach = dist[off] < 10_000
         single = float(((counts[off] == 1) & reach).sum()) / reach.sum()
 
-        us = timeit(lambda: DV.cdp_pairs_sampled(topo, 3, 10, seed=0), n=1)
+        us = timeit(lambda: DV.cdp_pairs_sampled(topo, 3, 10, seed=0))
         rep = DV.diversity_report(topo, n_cdp=n_cdp, n_pi=n_pi)
         emit(f"fig6/single_minimal/{topo.name}", us,
              f"frac_single={single:.2f}")
-        emit(f"table4/cdp/{topo.name}", us,
+        emit(f"table4/cdp/{topo.name}", us.median_us,
              f"d'={rep.d_prime} mean={rep.cdp_mean_frac:.2f}k' "
              f"tail1%={rep.cdp_tail_frac:.2f}k'")
-        emit(f"table4/pi/{topo.name}", us,
+        emit(f"table4/pi/{topo.name}", us.median_us,
              f"mean={rep.pi_mean_frac:.2f}k' tail={rep.pi_tail_frac:.2f}k' "
              f"tnl={rep.tnl:.0f}")
 

@@ -17,23 +17,26 @@ Claims demonstrated:
 
 from __future__ import annotations
 
-from repro.core import topology as T
-from repro.dist.fabric import ClusterFabric
 from repro.dist.collectives import layer_strides
 
-from .common import emit, timeit
+from .common import emit, get_session, timeit
 
 
 def main(quick: bool = False) -> None:
-    fabrics = [("sf11", T.slim_fly(11))]
+    session = get_session()
+    fabrics = [("sf11", "sf(q=11)")]
     if not quick:
-        fabrics.append(("ft12", T.fat_tree(12)))
+        fabrics.append(("ft12", "ft(k=12)"))
     n_dev = 256
     nbytes = 1e9     # ~ a 500M-param bf16 gradient block
 
-    for fname, topo in fabrics:
-        us = timeit(lambda: ClusterFabric(topo, n_layers=9, rho=0.6), n=1)
-        fb = ClusterFabric(topo, n_layers=9, rho=0.6)
+    for fname, tspec in fabrics:
+        from repro.experiments import Session
+
+        # Cold fabric construction (fresh session => layer stacks rebuilt).
+        us = timeit(lambda: Session().fabric(tspec, n_layers=9, rho=0.6),
+                    n=3, warmup=0)
+        fb = session.fabric(tspec, n_layers=9, rho=0.6)
         for kind in ("all-reduce", "all-to-all"):
             e = fb.collective_time(kind, n_dev, nbytes, "ecmp")
             f = fb.collective_time(kind, n_dev, nbytes, "fatpaths")
@@ -45,7 +48,7 @@ def main(quick: bool = False) -> None:
                                  strides=(1,))
         multi = fb.collective_time("all-reduce", n_dev, nbytes, "fatpaths",
                                    strides=layer_strides(n_dev, 4))
-        emit(f"fabric/{fname}/multiring", us,
+        emit(f"fabric/{fname}/multiring", us.median_us,
              f"1ring_ms={one.time_s * 1e3:.1f} "
              f"4ring_ms={multi.time_s * 1e3:.1f} "
              f"links={one.n_links_used}->{multi.n_links_used}")

@@ -30,7 +30,7 @@ def main(quick: bool = False) -> None:
     ok = np.allclose(pathcount_matmul(small, small, interpret=True),
                      ref.pathcount_ref(small, small), rtol=1e-5)
     emit(f"kernels/pathcount/{n}x{n}", us,
-         f"gflops={2 * n ** 3 / us / 1e3:.1f} allclose={ok}")
+         f"gflops={2 * n ** 3 / us.median_us / 1e3:.1f} allclose={ok}")
 
     ai = jnp.asarray(rng.integers(0, 1009, (n, n)), dtype=jnp.int32)
     fg = jax.jit(lambda x, y: ref.gf_matmul_ref(x, y, 1009))

@@ -13,11 +13,8 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import layers as L
-from repro.core import traffic as TR
-from repro.core import transport as TP
-from repro.core.topology import slim_fly
 
-from .common import emit, timeit
+from .common import emit, get_session, timeit
 
 
 def mean_disjoint(lr, n_samples: int = 40, seed: int = 1) -> float:
@@ -30,25 +27,30 @@ def mean_disjoint(lr, n_samples: int = 40, seed: int = 1) -> float:
 
 
 def main(quick: bool = False) -> None:
-    topo = slim_fly(7 if quick else 11)   # k'=11 / 17
+    from repro.experiments import Session
+
+    session = get_session()
+    tspec = f"sf(q={7 if quick else 11})"   # k'=11 / 17
     for n in (3, 5, 9):
         for rho in (0.4, 0.6, 0.8):
-            us = timeit(lambda: L.build_layers(topo, n, rho, seed=0), n=1)
-            lr = L.build_layers(topo, n, rho, seed=0)
-            emit(f"fig12/disjoint/sf{topo.n_routers}/n{n}/rho{rho}", us,
+            rspec = f"fatpaths(n_layers={n},rho={rho})"
+            # Cold build time: a fresh Session per call (the shared
+            # session would make every call after the first a cache hit).
+            us = timeit(lambda: Session().routing(tspec, rspec, seed=0),
+                        n=3, warmup=0)
+            lr = session.routing(tspec, rspec, seed=0).routing
+            nr = lr.topo.n_routers
+            emit(f"fig12/disjoint/sf{nr}/n{n}/rho{rho}", us,
                  f"mean_disjoint={mean_disjoint(lr):.2f}")
 
     # FCT sweep on the small instance (flow simulator)
-    topo5 = slim_fly(5)
-    wl = TR.make_workload(topo5, "adversarial", seed=3, randomize=False,
-                          n_rounds=2, flow_size=1 << 20)
+    steps = 400 if quick else 1500
     for n, rho in ((3, 0.4), (5, 0.6), (9, 0.6), (9, 0.8)):
-        lr = L.build_layers(topo5, n, rho, seed=0)
-        res = TP.simulate(topo5, lr, wl,
-                          TP.SimConfig(n_steps=400 if quick else 1500))
-        st = res.fct_stats()
-        emit(f"fig12/fct/n{n}/rho{rho}", st["p50"] * 1e6,
-             f"p99us={st['p99'] * 1e6:.0f} fin={st['finished']:.2f}")
+        rr = session.run("sf(q=5)", f"fatpaths(n_layers={n},rho={rho})",
+                         "adversarial", f"transport(steps={steps})", seed=3)
+        emit(f"fig12/fct/n{n}/rho{rho}", rr.metrics["fct_p50_us"],
+             f"p99us={rr.metrics['fct_p99_us']:.0f} "
+             f"fin={rr.metrics['finished']:.2f}")
 
 
 if __name__ == "__main__":

@@ -11,95 +11,66 @@ Claims reproduced (qualitatively, flow-level simulator):
     path!), non-minimal layers fix it;
   * purified transport beats TCP slow-start on short flows;
   * LetFlow == ECMP on SF (no minimal diversity to balance over).
+
+Every cell is declared as an experiments-API spec and executed through
+the shared Session (layer stacks built once across all figures).
 """
 
 from __future__ import annotations
 
-import numpy as np
+from .common import emit, get_session
 
-from repro.core import layers as L
-from repro.core import topology as T
-from repro.core import traffic as TR
-from repro.core import transport as TP
-
-from .common import emit, timeit
+SF = "sf(q=5)"
+FT2X = "ft(k=8,oversub=2)"                 # cost-matched (§7.1.1)
+FATPATHS = "fatpaths(n_layers=9,rho=0.6)"
 
 
-def run(topo, routing, wl, n_steps, **cfg_kw):
-    res = TP.simulate(topo, routing, wl, TP.SimConfig(n_steps=n_steps,
-                                                      **cfg_kw))
-    return res.fct_stats(), res
+def _emit_cell(name: str, rr, extra: str = "") -> None:
+    m = rr.metrics
+    derived = (f"p99us={m['fct_p99_us']:.0f} fin={m['finished']:.2f}"
+               + (f" {extra}" if extra else ""))
+    emit(name, m["fct_p50_us"], derived)
 
 
 def main(quick: bool = False) -> None:
-    steps = 600 if quick else 2000
-    sf = T.slim_fly(5)
-    ft = T.fat_tree(8, oversubscription=2)     # cost-matched (§7.1.1)
-    sf_fp = L.build_layers(sf, 9, 0.6, seed=0)
-    ft_nh = TP.ecmp_routing(ft, n_tables=8, seed=0)
+    session = get_session()
+    ev = f"transport(steps={600 if quick else 2000})"
+    ev2x = f"transport(steps={2 * (600 if quick else 2000)})"
 
     # ---- Fig 2: randomized workload, NDP-style transport everywhere -----
-    for label, topo, routing, bal in (
-            ("sf+fatpaths", sf, sf_fp, "fatpaths"),
-            ("ft+ndp-pr", ft, ft_nh, "letflow")):
-        wl = TR.make_workload(topo, "permutation", seed=1, randomize=True,
-                              flow_size=1 << 20)
-        st, res = run(topo, routing, wl, steps, balancing=bal)
-        tpf = np.nanmean(res.throughput_per_flow) / 1e9
-        emit(f"fig2/randomized/{label}", st["p50"] * 1e6,
-             f"p99us={st['p99'] * 1e6:.0f} tput={tpf:.2f}GB/s "
-             f"fin={st['finished']:.2f}")
+    for label, topo, scheme in (("sf+fatpaths", SF, FATPATHS),
+                                ("ft+ndp-pr", FT2X, "letflow")):
+        rr = session.run(topo, scheme, "permutation", ev, seed=1)
+        _emit_cell(f"fig2/randomized/{label}", rr,
+                   f"tput={rr.metrics['tput_gbs']:.2f}GB/s")
 
     # ---- Fig 11: skewed non-randomized; minimal vs non-minimal ----------
-    sf_min = L.build_layers(sf, 9, 1.0, seed=0)     # rho=1: minimal only
-    wl = TR.make_workload(sf, "adversarial", seed=3, randomize=False,
-                          n_rounds=2, flow_size=1 << 20)
-    for label, routing in (("nonminimal", sf_fp), ("minimal", sf_min)):
-        st, _ = run(sf, routing, wl, steps, balancing="fatpaths")
-        emit(f"fig11/skewed/sf+{label}", st["p50"] * 1e6,
-             f"p99us={st['p99'] * 1e6:.0f} fin={st['finished']:.2f}")
-    st, _ = run(ft, ft_nh, TR.make_workload(ft, "adversarial", seed=3,
-                                            randomize=False, n_rounds=2,
-                                            flow_size=1 << 20),
-                steps, balancing="letflow")
-    emit("fig11/skewed/ft+ndp", st["p50"] * 1e6,
-         f"p99us={st['p99'] * 1e6:.0f} fin={st['finished']:.2f}")
+    for label, scheme in (("nonminimal", FATPATHS),
+                          ("minimal", "minimal(n_layers=9)")):
+        rr = session.run(SF, scheme, "adversarial", ev, seed=3)
+        _emit_cell(f"fig11/skewed/sf+{label}", rr)
+    rr = session.run(FT2X, "letflow", "adversarial", ev, seed=3)
+    _emit_cell("fig11/skewed/ft+ndp", rr)
 
     # ---- collision microcase (Fig 5): ECMP == LetFlow << FatPaths -------
-    from repro.core import paths as P
-    import jax.numpy as jnp
-    ep2r = TR.endpoint_router_map(sf)
-    dist = np.asarray(P.shortest_path_lengths(
-        jnp.asarray(np.asarray(sf.adj, bool)), max_l=8))
-    A, B = next((a, b) for a in range(sf.n_routers)
-                for b in range(sf.n_routers) if dist[a, b] == 2)
-    src = np.concatenate([np.where(ep2r == A)[0]] * 4)
-    dst = np.tile(np.where(ep2r == B)[0], 4)
-    wl_c = TR.FlowWorkload(src=src.astype(np.int32), dst=dst.astype(np.int32),
-                           size=np.full(len(src), 4 * 2 ** 20),
-                           start=np.zeros(len(src)),
-                           src_router=ep2r[src].astype(np.int32),
-                           dst_router=ep2r[dst].astype(np.int32))
-    ecmp = TP.ecmp_routing(sf, n_tables=4, seed=0)
-    for label, routing, bal in (("fatpaths", sf_fp, "fatpaths"),
-                                ("letflow", ecmp, "letflow"),
-                                ("ecmp", ecmp, "ecmp")):
-        st, _ = run(sf, routing, wl_c, 2 * steps, balancing=bal)
-        emit(f"fig5/collision/{label}", st["p50"] * 1e6,
-             f"p99us={st['p99'] * 1e6:.0f}")
+    for scheme, label in ((FATPATHS, "fatpaths"), ("letflow(n=4)", "letflow"),
+                          ("ecmp(n=4)", "ecmp")):
+        rr = session.run(SF, scheme, "collide", ev2x, seed=0)
+        emit(f"fig5/collision/{label}", rr.metrics["fct_p50_us"],
+             f"p99us={rr.metrics['fct_p99_us']:.0f}")
 
     # ---- Fig 14: TCP-stack comparison ------------------------------------
-    wl = TR.make_workload(sf, "permutation", seed=5, flow_size=1 << 20)
+    steps = 600 if quick else 2000
     for transport in ("ndp", "tcp", "dctcp"):
-        st, _ = run(sf, sf_fp, wl, steps, transport=transport,
-                    balancing="fatpaths")
-        emit(f"fig14/transport/{transport}", st["p50"] * 1e6,
-             f"p99us={st['p99'] * 1e6:.0f} fin={st['finished']:.2f}")
-    for bal, routing in (("ecmp", ecmp), ("letflow", ecmp),
-                         ("fatpaths", sf_fp)):
-        st, _ = run(sf, routing, wl, steps, transport="tcp", balancing=bal)
-        emit(f"fig14/tcp-balancing/{bal}", st["p50"] * 1e6,
-             f"p99us={st['p99'] * 1e6:.0f} fin={st['finished']:.2f}")
+        rr = session.run(SF, FATPATHS, "permutation",
+                         f"transport(steps={steps},transport={transport})",
+                         seed=5)
+        _emit_cell(f"fig14/transport/{transport}", rr)
+    for scheme, label in (("ecmp(n=4)", "ecmp"), ("letflow(n=4)", "letflow"),
+                          (FATPATHS, "fatpaths")):
+        rr = session.run(SF, scheme, "permutation",
+                         f"transport(steps={steps},transport=tcp)", seed=5)
+        _emit_cell(f"fig14/tcp-balancing/{label}", rr)
 
 
 if __name__ == "__main__":

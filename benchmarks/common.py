@@ -1,37 +1,74 @@
-"""Shared benchmark plumbing: timing + CSV emission."""
+"""Shared benchmark plumbing: timing + CSV emission + the shared Session.
+
+All benchmark modules assemble their cells through one
+:class:`repro.experiments.Session` (``get_session()``), so layer stacks,
+ECMP tables, workloads and fabrics are built once across the whole
+``benchmarks.run`` sweep instead of once per module.
+"""
 
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import Callable, Iterable, List, Tuple
+from typing import Callable, List, Tuple, Union
 
 ROWS: List[Tuple[str, float, str]] = []
 
-
-def emit(name: str, us_per_call: float, derived: str = "") -> None:
-    ROWS.append((name, us_per_call, derived))
-    print(f"{name},{us_per_call:.1f},{derived}")
+_SESSION = None
 
 
-def timeit(fn: Callable, n: int = 3, warmup: int = 1) -> float:
-    """Median wall time in microseconds."""
+def get_session():
+    """The process-wide experiments Session shared by every benchmark."""
+    global _SESSION
+    if _SESSION is None:
+        from repro.experiments import Session
+        _SESSION = Session()
+    return _SESSION
+
+
+@dataclasses.dataclass(frozen=True)
+class Timing:
+    """Min/median wall time over n samples, in microseconds."""
+
+    min_us: float
+    median_us: float
+    n: int
+
+
+def emit(name: str, us: Union[float, "Timing"], derived: str = "") -> None:
+    """Record + print one benchmark row.  ``us`` may be a raw duration or
+    a :class:`Timing`, in which case the median is the headline number and
+    the min rides along in the derived column."""
+    if isinstance(us, Timing):
+        extra = f"min_us={us.min_us:.1f} n={us.n}"
+        derived = f"{derived} {extra}".strip()
+        us = us.median_us
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}")
+
+
+def timeit(fn: Callable, n: int = 3, warmup: int = 1) -> Timing:
+    """Wall time over ``n`` samples (median is the headline; a single
+    sample has no median, hence the n>=3 default even in quick mode)."""
     for _ in range(warmup):
         fn()
     ts = []
-    for _ in range(n):
+    for _ in range(max(1, n)):
         t0 = time.perf_counter()
         fn()
         ts.append((time.perf_counter() - t0) * 1e6)
     ts.sort()
-    return ts[len(ts) // 2]
+    return Timing(min_us=ts[0], median_us=ts[len(ts) // 2], n=len(ts))
+
+
+# The paper's topology set at 'small' scale (§2.2.2), cost-matched —
+# as experiment mini-specs, resolved through the shared Session.
+SMALL_TOPOS = ["sf(q=5)", "df(p=3)", "xp(k=8)", "hx(l=2,s=6)", "ft(k=8)"]
+SMALL_TOPOS_JF = SMALL_TOPOS + ["jfeq(of=sf(q=5))"]
 
 
 def small_topologies(include_jf: bool = True):
-    """The paper's topology set at 'small' scale (§2.2.2), cost-matched."""
-    from repro.core import topology as T
-
-    topos = [T.slim_fly(5), T.dragonfly(3), T.xpander(8), T.hyperx(2, 6),
-             T.fat_tree(8)]
-    if include_jf:
-        topos.append(T.equivalent_jellyfish(topos[0], seed=0))
-    return topos
+    """The small cost-matched topology set, built via the Session."""
+    session = get_session()
+    specs = SMALL_TOPOS_JF if include_jf else SMALL_TOPOS
+    return [session.topology(s) for s in specs]

@@ -1,30 +1,26 @@
 """The paper's full analysis pipeline on a chosen topology.
 
-    PYTHONPATH=src python examples/fatpaths_analysis.py [--topo sf:7]
+    PYTHONPATH=src python examples/fatpaths_analysis.py [--topo "sf(q=7)"]
 
-topology -> diversity metrics (Table 4 row) -> layer construction sweep ->
-MAT (LP) -> flow-simulated FCT under three routing schemes -> a summary of
-whether FatPaths helps *this* network (and why).
+topology -> diversity metrics (Table 4 row) -> layer construction sweep
+(MAT LP) -> flow-simulated FCT under three routing schemes -> a summary
+of whether FatPaths helps *this* network (and why).  Every cell is an
+``repro.experiments`` spec; compact forms like ``sf:7`` work too.
 """
 
 import argparse
 
-import numpy as np
-
-from repro.core import layers as L
-from repro.core import throughput as TH
-from repro.core import topology as T
-from repro.core import traffic as TR
-from repro.core import transport as TP
 from repro.core.diversity import diversity_report
+from repro.experiments import Session
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--topo", default="sf:5")
+    ap.add_argument("--topo", default="sf(q=5)")
     args = ap.parse_args()
 
-    topo = T.by_name(args.topo)
+    session = Session()
+    topo = session.topology(args.topo)
     print(f"== {topo.name}: N_r={topo.n_routers} N={topo.n_endpoints} "
           f"k'={topo.network_radix} ==")
 
@@ -36,33 +32,30 @@ def main():
           f"1% tail {rep.cdp_tail_frac:.0%}k'; "
           f"PI mean {rep.pi_mean_frac:.0%}k'; TNL {rep.tnl:.0f}")
 
-    wl = TR.make_workload(topo, "permutation", seed=0, frac_endpoints=0.55)
     print("\nlayer sweep (MAT via multicommodity LP):")
     for n, rho in ((2, 1.0), (5, 0.6), (9, 0.6)):
-        lr = L.build_layers(topo, n, rho, seed=0)
-        mat = TH.mat_lp(lr, wl)
-        print(f"  n={n} rho={rho}: T={mat.throughput:.3f} "
-              f"({mat.n_paths} candidate paths)")
+        rr = session.run(args.topo, f"fatpaths(n_layers={n},rho={rho})",
+                         "permutation(frac=0.55)", "mat")
+        print(f"  n={n} rho={rho}: T={rr.metrics['mat_T']:.3f} "
+              f"({rr.metrics['n_paths']:.0f} candidate paths)")
 
     print("\nflow simulation, skewed adversarial traffic:")
-    lr9 = L.build_layers(topo, 9, 0.6, seed=0)
-    wl = TR.make_workload(topo, "adversarial", seed=3, randomize=False,
-                          n_rounds=2)
     rows = []
-    for name, routing, bal in (
-            ("FatPaths(9 layers)", lr9, "fatpaths"),
-            ("LetFlow(minimal)", TP.ecmp_routing(topo), "letflow"),
-            ("ECMP(minimal)", TP.ecmp_routing(topo), "ecmp")):
-        st = TP.simulate(topo, routing, wl,
-                         TP.SimConfig(balancing=bal, n_steps=1500)).fct_stats()
-        rows.append((name, st))
-        print(f"  {name:20s} p50 {st['p50'] * 1e6:7.0f}us  "
-              f"p99 {st['p99'] * 1e6:7.0f}us  fin {st['finished']:.0%}")
+    for name, scheme in (("FatPaths(9 layers)", "fatpaths(n_layers=9,rho=0.6)"),
+                         ("LetFlow(minimal)", "letflow"),
+                         ("ECMP(minimal)", "ecmp")):
+        rr = session.run(args.topo, scheme, "adversarial",
+                         "transport(steps=1500)", seed=3)
+        rows.append((name, rr.metrics))
+        print(f"  {name:20s} p50 {rr.metrics['fct_p50_us']:7.0f}us  "
+              f"p99 {rr.metrics['fct_p99_us']:7.0f}us  "
+              f"fin {rr.metrics['finished']:.0%}")
 
     fp, ec = rows[0][1], rows[2][1]
-    verdict = "helps" if fp["p99"] <= ec["p99"] else "is neutral on"
-    print(f"\n=> FatPaths {verdict} this network "
-          f"(p99 {fp['p99'] / max(ec['p99'], 1e-12):.2f}x of ECMP)")
+    verdict = "helps" if fp["fct_p99_us"] <= ec["fct_p99_us"] \
+        else "is neutral on"
+    ratio = fp["fct_p99_us"] / max(ec["fct_p99_us"], 1e-12)
+    print(f"\n=> FatPaths {verdict} this network (p99 {ratio:.2f}x of ECMP)")
 
 
 if __name__ == "__main__":

@@ -1,17 +1,21 @@
-"""FatPaths quickstart: topology -> layers -> flowlet routing -> FCT.
+"""FatPaths quickstart: one declarative experiment cell per comparison.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Cells are mini-specs (topology / routing scheme / traffic pattern /
+evaluator) run through a memoizing ``repro.experiments.Session`` — the
+layer stack is built once and shared by everything below.
 """
 
-import numpy as np
-
-from repro.core import layers, topology, traffic, transport
 from repro.core.diversity import diversity_report
+from repro.experiments import Session
 
 
 def main():
+    session = Session()
+
     # 1. a Slim Fly (the paper's flagship D=2 topology)
-    topo = topology.slim_fly(q=5)
+    topo = session.topology("sf(q=5)")
     print(f"topology: {topo.name}  routers={topo.n_routers} "
           f"endpoints={topo.n_endpoints} k'={topo.network_radix}")
 
@@ -21,23 +25,21 @@ def main():
           f"  (CDP at d'={rep.d_prime}: {rep.cdp_mean_frac:.0%} of k')")
 
     # 3. FatPaths layered routing: 1 minimal + 8 sparse non-minimal layers
-    lr = layers.build_layers(topo, n_layers=9, rho=0.6, seed=0)
-    lr.validate_loop_free(n_samples=100)
-    print(f"layers: {lr.n_layers} (rho={lr.rho}), loop-free OK")
+    bundle = session.routing("sf(q=5)", "fatpaths(n_layers=9,rho=0.6)",
+                             seed=3)     # seed 3 == the cells below
+    bundle.routing.validate_loop_free(n_samples=100)
+    print(f"layers: {bundle.routing.n_layers} (rho={bundle.routing.rho}), "
+          "loop-free OK")
 
     # 4. simulate an adversarial workload under FatPaths vs minimal ECMP
-    wl = traffic.make_workload(topo, "adversarial", seed=3, randomize=False,
-                               n_rounds=2)
-    for name, routing, bal in (
-            ("FatPaths", lr, "fatpaths"),
-            ("ECMP", transport.ecmp_routing(topo), "ecmp")):
-        res = transport.simulate(topo, routing, wl,
-                                 transport.SimConfig(balancing=bal,
-                                                     n_steps=1200))
-        st = res.fct_stats()
-        print(f"{name:9s} p50 FCT {st['p50'] * 1e6:7.0f} us   "
-              f"p99 {st['p99'] * 1e6:7.0f} us   "
-              f"finished {st['finished']:.0%}")
+    for name, scheme in (("FatPaths", "fatpaths(n_layers=9,rho=0.6)"),
+                         ("ECMP", "ecmp")):
+        rr = session.run("sf(q=5)", scheme, "adversarial",
+                         "transport(steps=1200)", seed=3)
+        m = rr.metrics
+        print(f"{name:9s} p50 FCT {m['fct_p50_us']:7.0f} us   "
+              f"p99 {m['fct_p99_us']:7.0f} us   "
+              f"finished {m['finished']:.0%}")
 
 
 if __name__ == "__main__":

@@ -38,6 +38,19 @@ class FlowletDispatcher:
 
 
 def main():
+    # Why flowlet dispatch?  Model the serving ingress itself: a burst of
+    # requests converging on one frontend is the paper's incast
+    # (all-to-one) — one declarative experiment cell shows the NIC, not
+    # the fabric, is the bottleneck, so zero-probing elastic balancing
+    # (not smarter routing) is the right lever at the replica layer.
+    from repro.experiments import Session
+
+    rr = Session().run("sf(q=5)", "fatpaths", "alltoone", "fabric")
+    print(f"ingress incast on {rr.topo}: bottleneck "
+          f"{rr.metrics['bottleneck_mb']:.0f} MB at the NIC "
+          f"(fabric gini {rr.metrics['util_gini']:.2f}) -> "
+          "balance at the replica layer, flowlet-style\n")
+
     cfg = configs.get_smoke("olmoe-1b-7b")
     rt = Runtime(mesh=None)
     params = model_mod.init_params(cfg, rt, jax.random.PRNGKey(0))

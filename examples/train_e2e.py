@@ -55,6 +55,19 @@ def main():
     print(f"loss: {first['loss']:.3f} (step {first['step']}) -> "
           f"{last['loss']:.3f} (step {last['step']})")
     assert last["loss"] < first["loss"], "training must make progress"
+
+    # What would this run's gradient all-reduce cost on a real cluster?
+    # The experiments API models the DP collective on a Slim Fly fabric
+    # under minimal-path ECMP vs FatPaths layered routing (paper §8).
+    from repro.experiments import Session
+
+    fb = Session().fabric("sf(q=5)")
+    grad_bytes = cfg.param_count() * 2          # bf16 gradients
+    times = {s: fb.collective_time("all-reduce", 64, grad_bytes, s).time_s
+             for s in ("ecmp", "fatpaths")}
+    print(f"modelled 64-rank gradient all-reduce on sf(q=5): "
+          f"ecmp {times['ecmp'] * 1e3:.1f} ms vs "
+          f"fatpaths {times['fatpaths'] * 1e3:.1f} ms per step")
     print("OK")
 
 

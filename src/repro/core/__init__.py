@@ -18,4 +18,5 @@ from .layers import LayeredRouting, build_layers  # noqa: F401
 from .routing import ForwardingFunction  # noqa: F401
 from .topology import Topology, by_name  # noqa: F401
 from .traffic import FlowWorkload, make_workload  # noqa: F401
-from .transport import SimConfig, SimResult, ecmp_routing, simulate  # noqa: F401
+from .transport import (SimConfig, SimResult, ecmp_routing,  # noqa: F401
+                        simulate, simulate_seeds)

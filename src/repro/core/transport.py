@@ -43,7 +43,8 @@ from .layers import LayeredRouting
 from .topology import Topology
 from .traffic import FlowWorkload
 
-__all__ = ["SimConfig", "SimResult", "simulate", "ecmp_routing"]
+__all__ = ["SimConfig", "SimResult", "simulate", "simulate_seeds",
+           "ecmp_routing"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -171,8 +172,7 @@ def _pick_layers(key, reach, src_r, dst_r, minimal_only_mask, n_layers):
     return jnp.where(any_ok, pick, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "static"))
-def _run_scan(arrs, cfg: SimConfig, static: Tuple[int, int, int]):
+def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
     e_tot, n_layers, n_steps = static
     f = arrs["size"].shape[0]
     line_bytes = jnp.float32(cfg.line_rate * cfg.dt)   # bytes per step at line
@@ -181,7 +181,6 @@ def _run_scan(arrs, cfg: SimConfig, static: Tuple[int, int, int]):
     is_fatpaths = cfg.balancing == "fatpaths"
     reroute = cfg.balancing in ("letflow", "fatpaths")
 
-    key0 = jax.random.PRNGKey(cfg.seed)
     k_init, k_scan = jax.random.split(key0)
     layer0 = _pick_layers(k_init, arrs["reach"], arrs["src_r"], arrs["dst_r"],
                           minimal_only, n_layers)
@@ -282,22 +281,56 @@ def _run_scan(arrs, cfg: SimConfig, static: Tuple[int, int, int]):
     return final
 
 
+_run_scan = functools.partial(jax.jit,
+                              static_argnames=("cfg", "static"))(_run_scan_impl)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "static"))
+def _run_scan_batch(arrs, keys, cfg: SimConfig,
+                    static: Tuple[int, int, int]):
+    """One vmapped scan over a batch of PRNG keys (seed sweep)."""
+    return jax.vmap(lambda k: _run_scan_impl(arrs, k, cfg, static))(keys)
+
+
+def _to_result(size: np.ndarray, final, cfg: SimConfig) -> SimResult:
+    remaining = np.asarray(final["remaining"])
+    return SimResult(
+        fct=np.asarray(final["fct"]),
+        delivered=size - remaining,
+        size=size,
+        finished=remaining <= 0,
+        link_util_mean=float(final["util_acc"]) / cfg.n_steps,
+        config=cfg,
+    )
+
+
 def simulate(topo: Topology, routing: LayeredRouting, wl: FlowWorkload,
              cfg: SimConfig) -> SimResult:
     """Run the flow simulator; returns per-flow FCTs and aggregates."""
     arrs = _prepare(topo, routing, wl, cfg)
     static = (int(arrs["e_tot"]), int(arrs["n_layers"]), int(cfg.n_steps))
     jarrs = {k: v for k, v in arrs.items() if k not in ("e_tot", "n_layers")}
-    final = _run_scan(jarrs, cfg, static)
-    remaining = np.asarray(final["remaining"])
+    final = _run_scan(jarrs, jax.random.PRNGKey(cfg.seed), cfg, static)
+    return _to_result(np.asarray(arrs["size"]), final, cfg)
+
+
+def simulate_seeds(topo: Topology, routing: LayeredRouting, wl: FlowWorkload,
+                   cfg: SimConfig, seeds) -> list:
+    """Seed sweep batched through ONE vmapped scan (no Python loop over
+    simulations): same topology/routing/workload, one PRNG stream per
+    seed.  Returns a list of :class:`SimResult`, one per seed, identical
+    to looping :func:`simulate` with ``cfg.seed`` set to each value."""
+    seeds = [int(s) for s in seeds]
+    if not seeds:
+        return []
+    arrs = _prepare(topo, routing, wl, cfg)
+    static = (int(arrs["e_tot"]), int(arrs["n_layers"]), int(cfg.n_steps))
+    jarrs = {k: v for k, v in arrs.items() if k not in ("e_tot", "n_layers")}
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
+    finals = _run_scan_batch(jarrs, keys, cfg, static)
     size = np.asarray(arrs["size"])
-    fct = np.asarray(final["fct"])
-    finished = remaining <= 0
-    return SimResult(
-        fct=fct,
-        delivered=size - remaining,
-        size=size,
-        finished=finished,
-        link_util_mean=float(final["util_acc"]) / cfg.n_steps,
-        config=cfg,
-    )
+    return [
+        _to_result(size, {k: v[i] for k, v in finals.items()},
+                   dataclasses.replace(cfg, seed=s))
+        for i, s in enumerate(seeds)
+    ]

@@ -35,7 +35,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core import paths as paths_mod
-from ..core.layers import build_layers
+from ..core.layers import LayeredRouting, build_layers
 from ..core.topology import Topology
 from ..core.traffic import endpoint_router_map
 from ..core.transport import ecmp_routing
@@ -123,16 +123,23 @@ class ClusterFabric:
     def __init__(self, topo: Topology, n_layers: int = 9, rho: float = 0.6,
                  seed: int = 0, layer_scheme: str = "rand",
                  n_tables: int = 8, line_rate: float = 12.5e9,
-                 flowlet_quanta: int = 32):
+                 flowlet_quanta: int = 32,
+                 layers: Optional["LayeredRouting"] = None,
+                 ecmp: Optional["LayeredRouting"] = None):
+        """``layers``/``ecmp`` accept prebuilt stacks (matching the other
+        parameters) so a :class:`repro.experiments.Session` can share one
+        stack between transport cells and the fabric model instead of
+        rebuilding it here."""
         self.topo = topo
         self.n_layers = n_layers
         self.rho = rho
         self.seed = seed
         self.line_rate = line_rate
         self.flowlet_quanta = flowlet_quanta
-        self.layers = build_layers(topo, n_layers, rho, scheme=layer_scheme,
-                                   seed=seed)
-        self.ecmp = ecmp_routing(topo, n_tables=n_tables, seed=seed)
+        self.layers = layers if layers is not None else build_layers(
+            topo, n_layers, rho, scheme=layer_scheme, seed=seed)
+        self.ecmp = ecmp if ecmp is not None else ecmp_routing(
+            topo, n_tables=n_tables, seed=seed)
         self.ep2r = endpoint_router_map(topo)
         self._eix = topo.edge_index_matrix()
         self._n_edges = int(topo.adj.sum())

@@ -1,0 +1,37 @@
+"""repro.experiments — the declarative experiment API.
+
+The only sanctioned way to express an evaluation cell: a topology spec x
+a routing-scheme spec x a traffic-pattern spec x an evaluator spec,
+executed through a memoizing :class:`Session`:
+
+    from repro.experiments import Session
+    s = Session()
+    rr = s.run("sf(q=5)", "fatpaths(n_layers=9,rho=0.6)", "adversarial",
+               "transport(steps=1200)")
+    print(rr.metrics["fct_p99_us"])
+
+Grids go through :meth:`Session.sweep` or the CLI::
+
+    python -m repro.experiments sweep --topos sf,df,ft \\
+        --schemes ecmp,letflow,fatpaths --patterns adversarial,shuffle
+
+* :mod:`repro.experiments.specs`    — mini-spec grammar + ExperimentSpec.
+* :mod:`repro.experiments.registry` — decorator registries.
+* :mod:`repro.experiments.catalog`  — the registered axes.
+* :mod:`repro.experiments.session`  — artifact memoization + grid runner.
+* :mod:`repro.experiments.results`  — canonical RunResult JSON records.
+"""
+
+from .catalog import (EVALUATORS, ROUTINGS, TOPOLOGIES, TRAFFIC,  # noqa: F401
+                      RoutingBundle, topo_spec)
+from .results import (RunResult, results_from_json,  # noqa: F401
+                      results_to_json, summary_table)
+from .session import ResolvedCell, Session  # noqa: F401
+from .specs import ExperimentSpec, Spec, SpecError, split_spec_list  # noqa: F401
+
+__all__ = [
+    "Session", "ResolvedCell", "ExperimentSpec", "Spec", "SpecError",
+    "RunResult", "RoutingBundle", "results_to_json", "results_from_json",
+    "summary_table", "split_spec_list", "topo_spec",
+    "TOPOLOGIES", "ROUTINGS", "TRAFFIC", "EVALUATORS",
+]

@@ -1,0 +1,123 @@
+"""Experiment CLI: run cells or whole grids, emit RunResult JSON.
+
+  python -m repro.experiments sweep --topos sf,df,ft \\
+      --schemes ecmp,letflow,fatpaths --patterns adversarial,shuffle \\
+      [--evaluators transport] [--seeds 0] [--quick] [--json out.json]
+
+  python -m repro.experiments run --topo "sf(q=5)" --scheme fatpaths \\
+      --pattern adversarial [--evaluator "transport(steps=1200)"]
+
+  python -m repro.experiments list          # registered axes + defaults
+
+``--quick`` shortens transport simulations (steps=400) unless a spec
+pins ``steps`` explicitly.  One sweep invocation over the defaults
+reproduces the paper's Fig 14/15-style topology x scheme x pattern
+comparison grid in a single command.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .catalog import EVALUATORS, ROUTINGS, TOPOLOGIES, TRAFFIC
+from .results import results_to_json, summary_table
+from .session import Session
+from .specs import Spec, split_spec_list
+
+_QUICK_STEPS = 400
+
+
+def _quicken(evaluators, quick: bool):
+    """Apply --quick: cap transport steps unless the spec pins them."""
+    if not quick:
+        return evaluators
+    out = []
+    for e in evaluators:
+        spec = Spec.coerce(e)
+        if spec.name == "transport" and "steps" not in spec.kw:
+            spec = Spec(spec.name, spec.kwargs + (("steps", _QUICK_STEPS),))
+        out.append(spec)
+    return out
+
+
+def cmd_sweep(args) -> int:
+    session = Session()
+    evaluators = _quicken(split_spec_list(args.evaluators), args.quick)
+    seeds = [int(s) for s in args.seeds.split(",") if s != ""]
+    results = session.sweep(
+        topos=split_spec_list(args.topos),
+        routings=split_spec_list(args.schemes),
+        patterns=split_spec_list(args.patterns),
+        evaluators=evaluators, seeds=seeds,
+        callback=lambda rr: print(summary_table([rr]), flush=True))
+    builds = session.stats["stack_build"]
+    hits = session.stats["stack_hit"]
+    print(f"# {len(results)} cells; layer/table stacks built {builds}x, "
+          f"reused {hits}x", flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(results_to_json(results) + "\n")
+        print(f"# wrote {len(results)} RunResults to {args.json}")
+    return 0
+
+
+def cmd_run(args) -> int:
+    session = Session()
+    (evaluator,) = _quicken([args.evaluator], args.quick)
+    rr = session.run(args.topo, args.scheme, args.pattern, evaluator,
+                     seed=args.seed)
+    print(rr.to_json())
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(results_to_json([rr]) + "\n")
+    return 0
+
+
+def cmd_list(_args) -> int:
+    for title, reg in (("topologies", TOPOLOGIES),
+                       ("routing schemes", ROUTINGS),
+                       ("traffic patterns", TRAFFIC),
+                       ("evaluators", EVALUATORS)):
+        print(f"{title}:")
+        for name in reg.names():
+            defaults = ", ".join(f"{k}={v!r}"
+                                 for k, v in sorted(reg.defaults(name).items()))
+            print(f"  {name}({defaults})")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.experiments",
+                                 description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    sw = sub.add_parser("sweep", help="run a topology x scheme x pattern grid")
+    sw.add_argument("--topos", default="sf,df,ft")
+    sw.add_argument("--schemes", default="ecmp,letflow,fatpaths")
+    sw.add_argument("--patterns", default="adversarial,shuffle")
+    sw.add_argument("--evaluators", default="transport")
+    sw.add_argument("--seeds", default="0")
+    sw.add_argument("--quick", action="store_true")
+    sw.add_argument("--json", default="", help="write RunResult list here")
+    sw.set_defaults(fn=cmd_sweep)
+
+    rn = sub.add_parser("run", help="run a single cell")
+    rn.add_argument("--topo", required=True)
+    rn.add_argument("--scheme", required=True)
+    rn.add_argument("--pattern", required=True)
+    rn.add_argument("--evaluator", default="transport")
+    rn.add_argument("--seed", type=int, default=0)
+    rn.add_argument("--quick", action="store_true")
+    rn.add_argument("--json", default="")
+    rn.set_defaults(fn=cmd_run)
+
+    ls = sub.add_parser("list", help="show registered axes and defaults")
+    ls.set_defaults(fn=cmd_list)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

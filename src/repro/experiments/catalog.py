@@ -1,0 +1,329 @@
+"""The registered evaluation-matrix axes: topologies, routing schemes,
+traffic patterns, evaluators.
+
+Everything the repo's benchmarks/examples used to assemble by hand is
+declared here once:
+
+* ``TOPOLOGIES`` — paper topologies at cost-matched "small" defaults
+  (``sf`` == ``sf(q=5)``); compact ``by_name`` forms (``"sf:11"``) are
+  accepted too via :func:`topo_spec`.
+* ``ROUTINGS``   — ``ecmp`` / ``letflow`` (minimal multi-table) and
+  ``fatpaths`` / ``minimal`` (layer stacks, any §5.3 construction
+  scheme).  Builders receive a :class:`RoutingCtx` whose ``stack``
+  memoizer keys expensive artifacts by ``(topo, scheme, seed)`` so a
+  grid never rebuilds a layer stack twice — and ``ecmp``/``letflow``
+  share one table stack.
+* ``TRAFFIC``    — §2.4 patterns plus ``collide`` (the Fig 5 microcase:
+  many flows between one distance-2 router pair).
+* ``EVALUATORS`` — ``transport`` (flow simulator, vmap-batched seed
+  sweeps), ``mat`` (multicommodity-flow LP), ``fabric`` (link-load /
+  collective model over :class:`repro.dist.fabric.ClusterFabric`).
+
+Evaluators return ``(metrics, meta)``: plain-float metrics for the
+:class:`~repro.experiments.results.RunResult` record, and bookkeeping
+meta (flow counts, forwarding-table sizes, ...).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import numpy as np
+
+from ..core import routing as routing_mod
+from ..core import topology as topo_mod
+from ..core.layers import LayeredRouting, build_layers
+from ..core.throughput import mat_lp, mat_single_layer
+from ..core.topology import Topology
+from ..core.traffic import FlowWorkload, endpoint_router_map, make_workload
+from ..core.transport import SimConfig, ecmp_routing, simulate_seeds
+from .registry import Registry
+from .specs import Spec, SpecError, SpecLike
+
+__all__ = ["TOPOLOGIES", "ROUTINGS", "TRAFFIC", "EVALUATORS",
+           "RoutingBundle", "RoutingCtx", "topo_spec"]
+
+TOPOLOGIES = Registry("topology")
+ROUTINGS = Registry("routing scheme")
+TRAFFIC = Registry("traffic pattern")
+EVALUATORS = Registry("evaluator")
+
+
+# -----------------------------------------------------------------------------
+# Topologies.  Defaults are the repo's "small" cost-matched set.
+# -----------------------------------------------------------------------------
+@TOPOLOGIES.register("sf", q=5, p=None)
+def _sf(q, p) -> Topology:
+    return topo_mod.slim_fly(q, concentration=p)
+
+
+@TOPOLOGIES.register("df", p=3)
+def _df(p) -> Topology:
+    return topo_mod.dragonfly(p)
+
+
+@TOPOLOGIES.register("jf", n=50, k=6, p=3, seed=0)
+def _jf(n, k, p, seed) -> Topology:
+    return topo_mod.jellyfish(n, k, p, seed=seed)
+
+
+@TOPOLOGIES.register("xp", k=8, lift=None, p=None, seed=0)
+def _xp(k, lift, p, seed) -> Topology:
+    return topo_mod.xpander(k, lift=lift, concentration=p, seed=seed)
+
+
+@TOPOLOGIES.register("hx", l=2, s=6, p=None)
+def _hx(l, s, p) -> Topology:
+    return topo_mod.hyperx(l, s, concentration=p)
+
+
+@TOPOLOGIES.register("ft", k=8, oversub=1)
+def _ft(k, oversub) -> Topology:
+    return topo_mod.fat_tree(k, oversubscription=oversub)
+
+
+@TOPOLOGIES.register("clique", k=12, p=None)
+def _clique(k, p) -> Topology:
+    return topo_mod.clique(k, concentration=p)
+
+
+@TOPOLOGIES.register("star", n=16)
+def _star(n) -> Topology:
+    return topo_mod.star(n)
+
+
+@TOPOLOGIES.register("jfeq", of="sf(q=5)", seed=0)
+def _jfeq(of, seed) -> Topology:
+    """Equivalent Jellyfish of another registered topology (§2.2.3)."""
+    return topo_mod.equivalent_jellyfish(TOPOLOGIES.build(Spec.coerce(of)),
+                                         seed=seed)
+
+
+_COMPACT_KEYS = {"sf": ("q",), "df": ("p",), "ft": ("k",), "xp": ("k",),
+                 "clique": ("k",), "star": ("n",), "hx": ("l", "s"),
+                 "jf": ("n", "k", "p")}
+
+
+def topo_spec(obj: SpecLike) -> Spec:
+    """Coerce a topology spec, also accepting the compact
+    :func:`repro.core.topology.by_name` form (``"sf:11"``, ``"hx:2x6"``)."""
+    if isinstance(obj, str) and ":" in obj:
+        fam, _, arg = obj.partition(":")
+        keys = _COMPACT_KEYS.get(fam)
+        if keys is None:
+            raise SpecError(f"unknown compact topology spec {obj!r}; "
+                            f"known families: {', '.join(sorted(_COMPACT_KEYS))}")
+        vals = arg.split("x")
+        if len(vals) != len(keys):
+            raise SpecError(f"compact spec {obj!r} needs "
+                            f"{len(keys)} 'x'-separated values")
+        return Spec(fam, tuple((k, int(v)) for k, v in zip(keys, vals)))
+    return Spec.coerce(obj)
+
+
+# -----------------------------------------------------------------------------
+# Routing schemes.
+# -----------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RoutingBundle:
+    """A built routing stack + the load-balancing mode that drives it."""
+
+    routing: LayeredRouting
+    balancing: str            # ecmp | letflow | fatpaths
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutingCtx:
+    """What a routing builder gets from the session: the topology and a
+    ``stack(key, thunk)`` memoizer for the expensive artifacts."""
+
+    topo: Topology
+    topo_key: str
+    seed: int
+    stack: Callable[[tuple, Callable[[], LayeredRouting]], LayeredRouting]
+
+
+def _minimal_tables(ctx: RoutingCtx, n: int) -> LayeredRouting:
+    # ecmp and letflow differ only in balancing — one shared table stack.
+    return ctx.stack(
+        ("tables", ctx.topo_key, int(n), ctx.seed),
+        lambda: ecmp_routing(ctx.topo, n_tables=int(n), seed=ctx.seed))
+
+
+def _layer_stack(ctx: RoutingCtx, scheme: str, n_layers: int,
+                 rho: float) -> LayeredRouting:
+    return ctx.stack(
+        ("layers", ctx.topo_key, scheme, int(n_layers), float(rho), ctx.seed),
+        lambda: build_layers(ctx.topo, int(n_layers), float(rho),
+                             scheme=scheme, seed=ctx.seed))
+
+
+@ROUTINGS.register("ecmp", n=8)
+def _ecmp(ctx: RoutingCtx, n) -> RoutingBundle:
+    return RoutingBundle(_minimal_tables(ctx, n), "ecmp")
+
+
+@ROUTINGS.register("letflow", n=8)
+def _letflow(ctx: RoutingCtx, n) -> RoutingBundle:
+    return RoutingBundle(_minimal_tables(ctx, n), "letflow")
+
+
+@ROUTINGS.register("fatpaths", n_layers=9, rho=0.6, scheme="rand")
+def _fatpaths(ctx: RoutingCtx, n_layers, rho, scheme) -> RoutingBundle:
+    return RoutingBundle(_layer_stack(ctx, scheme, n_layers, rho), "fatpaths")
+
+
+@ROUTINGS.register("minimal", n_layers=9)
+def _minimal(ctx: RoutingCtx, n_layers) -> RoutingBundle:
+    """Minimal-only ablation: a rho=1 stack driven by flowlet balancing
+    (Fig 11's 'minimal' arm)."""
+    return RoutingBundle(_layer_stack(ctx, "rand", n_layers, 1.0), "fatpaths")
+
+
+# -----------------------------------------------------------------------------
+# Traffic patterns.
+# -----------------------------------------------------------------------------
+def _register_workload(name: str, **overrides):
+    defaults = dict(rounds=1, flow_size=float(1 << 20), randomize=True,
+                    frac=1.0, spread=0.0, arrival=0.0)
+    defaults.update(overrides)
+
+    @TRAFFIC.register(name, **defaults)
+    def _build(topo, seed, rounds, flow_size, randomize, frac, spread,
+               arrival, _name=name) -> FlowWorkload:
+        return make_workload(topo, _name, flow_size=flow_size,
+                             n_rounds=int(rounds), arrival_rate=arrival,
+                             randomize=bool(randomize), seed=seed,
+                             frac_endpoints=frac, size_spread=spread)
+
+
+_register_workload("uniform")
+_register_workload("permutation")
+_register_workload("offdiag")
+_register_workload("shuffle")
+_register_workload("alltoone")
+# The paper's skew cases run un-randomized (§3.4 is the mitigation):
+_register_workload("adversarial", rounds=2, randomize=False)
+_register_workload("stencil", randomize=False)
+_register_workload("worstcase", randomize=False)
+
+
+@TRAFFIC.register("collide", rounds=4, flow_size=float(4 << 20))
+def _collide(topo, seed, rounds, flow_size) -> FlowWorkload:
+    """Fig 5 microcase: every endpoint of router A sends ``rounds`` flows
+    to endpoints of a router B at distance min(2, diameter) — all flows
+    share the (often unique) minimal path."""
+    import jax.numpy as jnp
+
+    from ..core import paths as paths_mod
+
+    ep2r = endpoint_router_map(topo)
+    dist = np.asarray(paths_mod.shortest_path_lengths(
+        jnp.asarray(np.asarray(topo.adj, bool)), max_l=8))
+    conc = np.asarray(topo.concentration)
+    target = 2 if (dist[(dist > 0) & (dist < 10_000)] >= 2).any() else 1
+    pair = next(((a, b) for a in range(topo.n_routers)
+                 for b in range(topo.n_routers)
+                 if dist[a, b] == target and conc[a] > 0 and conc[b] > 0),
+                None)
+    if pair is None:
+        raise SpecError(f"no routable endpoint pair on {topo.name}")
+    a_eps = np.where(ep2r == pair[0])[0]
+    b_eps = np.where(ep2r == pair[1])[0]
+    m = min(len(a_eps), len(b_eps))
+    src = np.tile(a_eps[:m], int(rounds))
+    dst = np.tile(b_eps[:m], int(rounds))
+    return FlowWorkload(
+        src=src.astype(np.int32), dst=dst.astype(np.int32),
+        size=np.full(len(src), float(flow_size)),
+        start=np.zeros(len(src)),
+        src_router=ep2r[src].astype(np.int32),
+        dst_router=ep2r[dst].astype(np.int32))
+
+
+# -----------------------------------------------------------------------------
+# Evaluators.  Signature: (session, cell, **kw) -> (metrics, meta).
+# -----------------------------------------------------------------------------
+def _fct_metrics(sims) -> Dict[str, float]:
+    fct = np.concatenate([r.fct[r.finished] for r in sims])
+    tput = np.concatenate([r.throughput_per_flow for r in sims])
+    finished = float(np.mean([r.finished.mean() for r in sims]))
+    util = float(np.mean([r.link_util_mean for r in sims]))
+    if len(fct) == 0:
+        p50 = p99 = mean = float("nan")
+    else:
+        p50 = float(np.quantile(fct, 0.50) * 1e6)
+        p99 = float(np.quantile(fct, 0.99) * 1e6)
+        mean = float(fct.mean() * 1e6)
+    if tput.size and not np.all(np.isnan(tput)):
+        tput_gbs = float(np.nanmean(tput) / 1e9)
+    else:
+        tput_gbs = float("nan")
+    return {"fct_p50_us": p50, "fct_p99_us": p99, "fct_mean_us": mean,
+            "finished": finished, "tput_gbs": tput_gbs, "link_util": util}
+
+
+@EVALUATORS.register("transport", steps=2000, transport="ndp", seeds=1,
+                     dt=10e-6, flowlet_gap=50e-6)
+def _transport(session, cell, steps, transport, seeds, dt, flowlet_gap
+               ) -> Tuple[Dict[str, float], Dict[str, Any]]:
+    """Flow-level simulation (§7); ``seeds`` > 1 batches a sim-seed sweep
+    through one vmapped scan instead of a Python loop."""
+    cfg = SimConfig(transport=transport, balancing=cell.bundle.balancing,
+                    n_steps=int(steps), dt=dt, flowlet_gap=flowlet_gap,
+                    seed=cell.seed)
+    sim_seeds = [cell.seed + 1000 * i for i in range(max(1, int(seeds)))]
+    sims = simulate_seeds(cell.topo, cell.bundle.routing, cell.workload,
+                          cfg, sim_seeds)
+    meta = {"n_seeds": len(sim_seeds), "transport": transport,
+            "balancing": cell.bundle.balancing}
+    return _fct_metrics(sims), meta
+
+
+@EVALUATORS.register("mat", max_hops=16, capacity=1.0)
+def _mat(session, cell, max_hops, capacity
+         ) -> Tuple[Dict[str, float], Dict[str, Any]]:
+    """Maximum achievable throughput: LP relaxation + greedy single-layer
+    rounding (§6.4)."""
+    lp = mat_lp(cell.bundle.routing, cell.workload, max_hops=int(max_hops),
+                capacity=capacity)
+    single = mat_single_layer(cell.bundle.routing, cell.workload,
+                              max_hops=int(max_hops), capacity=capacity)
+    metrics = {"mat_T": float(lp.throughput),
+               "mat_T_single": float(single.throughput),
+               "n_paths": float(lp.n_paths),
+               "n_demands": float(lp.n_demands)}
+    return metrics, {"lp_status": lp.status}
+
+
+@EVALUATORS.register("fabric", line_rate=12.5e9, quanta=32)
+def _fabric(session, cell, line_rate, quanta
+            ) -> Tuple[Dict[str, float], Dict[str, Any]]:
+    """Route the workload's flows over a modelled ClusterFabric and report
+    link loads (ECMP hash-split for ecmp/letflow cells, greedy flowlets
+    for fatpaths/minimal cells).  The fabric's candidate paths are the
+    cell's OWN routing stack — a 'minimal' cell is measured over its
+    minimal-only layers, not a default FatPaths stack."""
+    fb = session.bundle_fabric(cell.spec.topo, cell.spec.routing,
+                               seed=cell.seed, line_rate=line_rate,
+                               flowlet_quanta=int(quanta))
+    scheme = "fatpaths" if cell.bundle.balancing == "fatpaths" else "ecmp"
+    wl = cell.workload
+    flows = list(zip(wl.src.tolist(), wl.dst.tolist(), wl.size.tolist()))
+    rep = fb.evaluate_flows(flows, scheme=scheme,
+                            kind=cell.spec.pattern.name,
+                            n_ranks=cell.topo.n_endpoints,
+                            payload_bytes=float(wl.size.sum()))
+    metrics = {"bottleneck_mb": rep.bottleneck_bytes / 2 ** 20,
+               "time_ms": rep.time_s * 1e3,
+               "util_gini": rep.util_gini,
+               "links_used": float(rep.n_links_used),
+               "fabric_gb": rep.fabric_bytes / 1e9}
+    return metrics, {"fabric_scheme": scheme}
+
+
+def table_meta(bundle: RoutingBundle) -> Dict[str, int]:
+    """§5.5 deployment accounting for a built stack."""
+    return {"table_exact": int(routing_mod.table_entries_exact(bundle.routing)),
+            "table_prefix": int(routing_mod.table_entries_prefix(bundle.routing))}

@@ -1,0 +1,88 @@
+"""Result layer: the canonical JSON-serializable experiment record.
+
+Every evaluator reduces to one :class:`RunResult` per cell — a flat,
+diffable record (cell identity strings, a ``metrics`` dict of plain
+floats, a ``meta`` dict of bookkeeping, wall time) that round-trips
+through JSON exactly.  The perf trajectory, the CI smoke artifact and
+the CLI all speak this one format.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Iterable, List
+
+__all__ = ["RunResult", "results_to_json", "results_from_json",
+           "summary_table"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RunResult:
+    """Outcome of one evaluated cell of the experiment matrix."""
+
+    topo: str                  # canonical mini-spec, e.g. "sf(q=5)"
+    routing: str               # e.g. "fatpaths(n_layers=9,rho=0.6)"
+    pattern: str               # e.g. "adversarial"
+    evaluator: str             # e.g. "transport(steps=400)"
+    seed: int
+    metrics: Dict[str, float]
+    meta: Dict[str, Any]
+    wall_s: float
+
+    @property
+    def cell_id(self) -> str:
+        return (f"{self.topo}/{self.routing}/{self.pattern}/"
+                f"{self.evaluator}@s{self.seed}")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"topo": self.topo, "routing": self.routing,
+                "pattern": self.pattern, "evaluator": self.evaluator,
+                "seed": self.seed, "metrics": dict(self.metrics),
+                "meta": dict(self.meta), "wall_s": self.wall_s}
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "RunResult":
+        return cls(topo=d["topo"], routing=d["routing"],
+                   pattern=d["pattern"], evaluator=d["evaluator"],
+                   seed=int(d["seed"]), metrics=dict(d["metrics"]),
+                   meta=dict(d["meta"]), wall_s=float(d["wall_s"]))
+
+    @classmethod
+    def from_json(cls, text: str) -> "RunResult":
+        return cls.from_dict(json.loads(text))
+
+
+def results_to_json(results: Iterable[RunResult], indent: int = 1) -> str:
+    return json.dumps([r.to_dict() for r in results], indent=indent,
+                      sort_keys=True)
+
+
+def results_from_json(text: str) -> List[RunResult]:
+    return [RunResult.from_dict(d) for d in json.loads(text)]
+
+
+def _fmt(v: Any) -> str:
+    if isinstance(v, float):
+        if v != v:                       # nan
+            return "nan"
+        if abs(v) >= 1000 or (0 < abs(v) < 0.01):
+            return f"{v:.3g}"
+        return f"{v:.2f}"
+    return str(v)
+
+
+def summary_table(results: Iterable[RunResult]) -> str:
+    """Aligned text table: one row per cell, metrics as k=v."""
+    rows = []
+    for r in results:
+        cell = f"{r.topo} {r.routing} {r.pattern} {r.evaluator} s{r.seed}"
+        mets = " ".join(f"{k}={_fmt(v)}" for k, v in sorted(r.metrics.items()))
+        rows.append((cell, mets, r.wall_s))
+    if not rows:
+        return "(no results)"
+    w = max(len(c) for c, _, _ in rows)
+    return "\n".join(f"{c:<{w}}  [{t:6.2f}s]  {m}" for c, m, t in rows)

@@ -39,7 +39,17 @@ def load_cells(dir_: str, tag: str = "") -> List[Dict]:
     return cells
 
 
-_FABRIC_CACHE: Dict[str, object] = {}
+# One experiments Session caches fabrics (and their layer stacks) across
+# every cell of a roofline report.
+_SESSION = None
+
+
+def _session():
+    global _SESSION
+    if _SESSION is None:
+        from ..experiments import Session
+        _SESSION = Session()
+    return _SESSION
 
 
 def _advice(cell: Dict) -> str:
@@ -64,14 +74,11 @@ def _advice(cell: Dict) -> str:
 
 def fabric_collective_term(cell: Dict, fabric_spec: str = "sf:11",
                            n_rings: int = 1) -> Dict[str, float]:
-    """Re-evaluate the cell's collective traffic on a modelled fabric."""
-    from ..core.topology import by_name
-    from ..dist.fabric import ClusterFabric
+    """Re-evaluate the cell's collective traffic on a modelled fabric.
 
-    if fabric_spec not in _FABRIC_CACHE:
-        _FABRIC_CACHE[fabric_spec] = ClusterFabric(
-            by_name(fabric_spec), n_layers=9, rho=0.6)
-    fb = _FABRIC_CACHE[fabric_spec]
+    ``fabric_spec`` is an experiments topology mini-spec — canonical
+    (``"sf(q=11)"``) or compact (``"sf:11"``) form."""
+    fb = _session().fabric(fabric_spec, n_layers=9, rho=0.6)
     topo = fb.topo
     n = cell["n_devices"]
     out = {}

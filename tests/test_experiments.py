@@ -1,0 +1,230 @@
+"""repro.experiments: spec grammar, registries, session caching, results."""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.experiments import (EVALUATORS, ROUTINGS, TOPOLOGIES, TRAFFIC,
+                               ExperimentSpec, RunResult, Session, Spec,
+                               SpecError, results_from_json, results_to_json,
+                               split_spec_list, topo_spec)
+
+QUICK_EV = "transport(steps=30)"
+
+
+@pytest.fixture(scope="module")
+def session():
+    return Session()
+
+
+# ---- spec grammar -----------------------------------------------------------
+def test_spec_parse_format_roundtrip():
+    for text in ("sf(q=19)", "fatpaths(n_layers=9,rho=0.6)", "ecmp(n=8)",
+                 "adversarial", "transport(steps=400,transport=tcp)",
+                 "jfeq(of=sf(q=5),seed=1)", "hx(l=2,s=6)"):
+        spec = Spec.parse(text)
+        assert Spec.parse(spec.format()) == spec
+        assert Spec.parse(spec.format()).format() == spec.format()
+
+
+def test_spec_canonical_order_and_types():
+    a = Spec.parse("fatpaths(rho=0.6,n_layers=9)")
+    b = Spec.parse("fatpaths(n_layers=9,rho=0.6)")
+    assert a == b and hash(a) == hash(b)
+    assert a.format() == "fatpaths(n_layers=9,rho=0.6)"
+    kw = Spec.parse("x(a=3,b=0.5,c=true,d=false,e=none,f=tcp)").kw
+    assert kw == {"a": 3, "b": 0.5, "c": True, "d": False, "e": None,
+                  "f": "tcp"}
+    assert isinstance(kw["a"], int) and not isinstance(kw["a"], bool)
+    # nested spec values survive the round trip as strings
+    nested = Spec.parse("jfeq(of=sf(q=5))")
+    assert nested.kw["of"] == "sf(q=5)"
+
+
+@pytest.mark.parametrize("bad", ["sf(q=19", "sf q=19)", "sf(q)", "sf(=3)",
+                                 "sf(q=3,q=4)", "", "sf(q=)", "3sf"])
+def test_spec_parse_rejects_malformed(bad):
+    with pytest.raises(SpecError):
+        Spec.parse(bad)
+
+
+def test_split_spec_list_respects_parens():
+    assert split_spec_list("ecmp(n=4),fatpaths(n_layers=9,rho=0.6),sf") == \
+        ["ecmp(n=4)", "fatpaths(n_layers=9,rho=0.6)", "sf"]
+
+
+def test_compact_topo_specs():
+    assert topo_spec("sf:11") == Spec.parse("sf(q=11)")
+    assert topo_spec("hx:2x6") == Spec.parse("hx(l=2,s=6)")
+    with pytest.raises(SpecError):
+        topo_spec("nope:3")
+
+
+# ---- registry rejection -----------------------------------------------------
+def test_registries_reject_unknown_names(session):
+    with pytest.raises(SpecError, match="unknown topology"):
+        session.topology("notatopo")
+    with pytest.raises(SpecError, match="unknown routing scheme"):
+        session.routing("clique(k=4)", "ospf")
+    with pytest.raises(SpecError, match="unknown traffic pattern"):
+        session.workload("clique(k=4)", "elephants")
+    with pytest.raises(SpecError, match="unknown evaluator"):
+        session.run("clique(k=4)", "ecmp(n=2)", "uniform", "htsim")
+
+
+def test_registries_reject_unknown_params(session):
+    with pytest.raises(SpecError, match="no parameter"):
+        session.topology("sf(qq=5)")
+    with pytest.raises(SpecError, match="no parameter"):
+        session.routing("clique(k=4)", "fatpaths(layers=9)")
+
+
+def test_registry_listings_cover_the_matrix():
+    assert {"sf", "df", "jf", "xp", "hx", "ft"} <= set(TOPOLOGIES.names())
+    assert {"ecmp", "letflow", "fatpaths", "minimal"} <= set(ROUTINGS.names())
+    assert {"adversarial", "shuffle", "permutation"} <= set(TRAFFIC.names())
+    assert {"transport", "mat", "fabric"} <= set(EVALUATORS.names())
+
+
+# ---- session caching --------------------------------------------------------
+def test_session_never_rebuilds_layer_stacks():
+    s = Session()
+    grid = s.sweep(topos=["clique(k=6)"],
+                   routings=["fatpaths(n_layers=3)", "ecmp(n=2)",
+                             "letflow(n=2)"],
+                   patterns=["uniform", "adversarial"],
+                   evaluators=[QUICK_EV], seeds=[0])
+    assert len(grid) == 6
+    # one fatpaths layer stack + ONE table stack shared by ecmp & letflow
+    assert s.stats["stack_build"] == 2
+    before = s.stats["stack_build"]
+    s.sweep(topos=["clique(k=6)"],
+            routings=["fatpaths(n_layers=3)", "letflow(n=2)"],
+            patterns=["uniform"], evaluators=[QUICK_EV], seeds=[0])
+    assert s.stats["stack_build"] == before          # all cache hits
+    # a different seed is a different stack
+    s.run("clique(k=6)", "fatpaths(n_layers=3)", "uniform", QUICK_EV, seed=1)
+    assert s.stats["stack_build"] == before + 1
+
+
+def test_fabric_shares_session_layer_stack():
+    s = Session()
+    bundle = s.routing("clique(k=6)", "fatpaths(n_layers=9,rho=0.6)")
+    fb = s.fabric("clique(k=6)", n_layers=9, rho=0.6)
+    assert fb.layers is bundle.routing          # same object, not a rebuild
+    assert s.stats["stack_build"] == 2          # layers + fabric's tables
+
+
+def test_default_and_explicit_specs_share_cache():
+    s = Session()
+    assert s.topology("clique") is s.topology("clique(k=12)")
+    s.workload("clique", "uniform")
+    s.workload("clique(k=12)", "uniform(rounds=1)")
+    assert s.stats["workload_build"] == 1
+    s.routing("clique", "ecmp", seed=0)
+    s.routing("clique(k=12)", "ecmp(n=8)", seed=0)
+    assert s.stats["stack_build"] == 1
+
+
+def test_fabric_evaluator_uses_the_cells_own_stack():
+    s = Session()
+    rr = s.run("clique(k=6)", "minimal(n_layers=3)", "uniform", "fabric")
+    # only the cell's minimal stack was built — no shadow FatPaths stack,
+    # no unused ECMP table stack
+    assert s.stats["stack_build"] == 1
+    fb = s.bundle_fabric("clique(k=6)", "minimal(n_layers=3)")
+    assert fb.layers is s.routing("clique(k=6)", "minimal(n_layers=3)").routing
+    assert rr.meta["fabric_scheme"] == "fatpaths"   # flowlet balancing
+    # ablation is real: the minimal fabric exposes fewer candidate links
+    # than the non-minimal default on an adversarial-ish pattern
+    assert fb.layers.n_layers == 3
+
+
+def test_run_rejects_spec_plus_extra_args():
+    s = Session()
+    spec = ExperimentSpec.make("clique(k=6)", "ecmp(n=2)", "uniform",
+                               QUICK_EV)
+    with pytest.raises(ValueError, match="no other arguments"):
+        s.run(spec, seed=3)
+    with pytest.raises(ValueError, match="no other arguments"):
+        s.run(spec, evaluator="mat")
+    assert s.run(spec).metrics["finished"] >= 0     # bare spec still fine
+
+
+def test_workloads_and_topologies_cached(session):
+    w1 = session.workload("clique(k=6)", "uniform", seed=0)
+    w2 = session.workload("clique(k=6)", "uniform", seed=0)
+    assert w1 is w2
+    assert session.topology("clique(k=6)") is session.topology("clique(k=6)")
+
+
+# ---- results ----------------------------------------------------------------
+def test_run_result_json_roundtrip(session):
+    rr = session.run("clique(k=6)", "ecmp(n=2)", "uniform", QUICK_EV)
+    assert rr.metrics["finished"] > 0           # sanity: flows completed
+    back = RunResult.from_json(rr.to_json())
+    assert back == rr
+    assert json.loads(rr.to_json())["metrics"] == rr.metrics
+    many = results_from_json(results_to_json([rr, rr]))
+    assert many == [rr, rr]
+
+
+def test_run_result_records_cell_and_tables(session):
+    rr = session.run("clique(k=6)", "fatpaths(n_layers=3)", "adversarial",
+                     QUICK_EV, seed=2)
+    assert rr.topo == "clique(k=6)"
+    assert rr.routing == "fatpaths(n_layers=3)"
+    assert rr.seed == 2
+    assert rr.meta["table_exact"] > 0
+    assert rr.meta["table_prefix"] <= rr.meta["table_exact"]
+    assert rr.wall_s > 0
+    assert "clique(k=6)/fatpaths(n_layers=3)/adversarial" in rr.cell_id
+
+
+def test_mat_and_fabric_evaluators(session):
+    mat = session.run("clique(k=6)", "fatpaths(n_layers=3)",
+                      "permutation(frac=0.8)", "mat")
+    assert mat.metrics["mat_T"] > 0
+    assert mat.metrics["mat_T_single"] <= mat.metrics["mat_T"] + 1e-9
+    fab = session.run("clique(k=6)", "fatpaths(n_layers=3)", "alltoone",
+                      "fabric")
+    assert fab.metrics["bottleneck_mb"] > 0
+    assert fab.meta["fabric_scheme"] == "fatpaths"
+
+
+# ---- vmap seed sweep --------------------------------------------------------
+def test_simulate_seeds_matches_sequential(session):
+    from repro.core import transport as TP
+
+    topo = session.topology("clique(k=6)")
+    bundle = session.routing("clique(k=6)", "letflow(n=2)")
+    wl = session.workload("clique(k=6)", "uniform")
+    cfg = TP.SimConfig(balancing=bundle.balancing, n_steps=40)
+    batch = TP.simulate_seeds(topo, bundle.routing, wl, cfg, [0, 7])
+    for res, seed in zip(batch, [0, 7]):
+        single = TP.simulate(topo, bundle.routing, wl,
+                             dataclasses.replace(cfg, seed=seed))
+        np.testing.assert_allclose(res.fct, single.fct, rtol=1e-6)
+        assert (res.finished == single.finished).all()
+        assert res.config.seed == seed
+    assert TP.simulate_seeds(topo, bundle.routing, wl, cfg, []) == []
+
+
+# ---- the grid acceptance shape ---------------------------------------------
+def test_sweep_grid_shape_and_ids():
+    s = Session()
+    rs = s.sweep(topos=["clique(k=6)", "star(n=8)"],
+                 routings=["ecmp(n=2)", "fatpaths(n_layers=3)"],
+                 patterns=["uniform"], evaluators=[QUICK_EV], seeds=[0, 1])
+    assert len(rs) == 8
+    assert len({r.cell_id for r in rs}) == 8
+    for r in rs:
+        assert set(r.metrics) >= {"fct_p50_us", "fct_p99_us", "finished"}
+
+
+def test_experiment_spec_make():
+    e = ExperimentSpec.make("sf(q=5)", "ecmp", "uniform", seed=4)
+    assert e.topo == Spec.parse("sf(q=5)") and e.seed == 4
+    assert "sf(q=5)/ecmp/uniform/transport@s4" == e.cell_id
