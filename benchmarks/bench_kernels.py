@@ -15,6 +15,7 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.gfmm import gf_matmul
 from repro.kernels.pathcount import pathcount_matmul
+from repro.kernels.semiring import semiring_matmul
 
 from .common import emit, timeit
 
@@ -31,6 +32,23 @@ def main(quick: bool = False) -> None:
                      ref.pathcount_ref(small, small), rtol=1e-5)
     emit(f"kernels/pathcount/{n}x{n}", us,
          f"gflops={2 * n ** 3 / us.median_us / 1e3:.1f} allclose={ok}")
+
+    # ---- semiring engine: the path/layer pipeline's product -------------
+    for sr in ("count", "bool", "minplus"):
+        if sr == "bool":
+            x = a > 0.5
+        elif sr == "minplus":
+            x = jnp.where(a < 0.2, a * 10, jnp.inf)
+        else:
+            x = a
+        fs = jax.jit(lambda u, v, _sr=sr: ref.semiring_matmul_ref(u, v, _sr))
+        us = timeit(lambda: jax.block_until_ready(fs(x, x)), n=3)
+        xs = x[:128, :128]
+        ok = np.allclose(
+            np.asarray(semiring_matmul(xs, xs, sr, backend="pallas",
+                                       interpret=True), dtype=np.float32),
+            np.asarray(fs(xs, xs), dtype=np.float32), rtol=1e-5)
+        emit(f"kernels/semiring/{sr}/{n}x{n}", us, f"allclose={ok}")
 
     ai = jnp.asarray(rng.integers(0, 1009, (n, n)), dtype=jnp.int32)
     fg = jax.jit(lambda x, y: ref.gf_matmul_ref(x, y, 1009))

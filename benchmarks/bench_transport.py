@@ -18,7 +18,9 @@ the shared Session (layer stacks built once across all figures).
 
 from __future__ import annotations
 
-from .common import emit, get_session
+import dataclasses
+
+from .common import emit, get_session, timeit
 
 SF = "sf(q=5)"
 FT2X = "ft(k=8,oversub=2)"                 # cost-matched (§7.1.1)
@@ -71,6 +73,21 @@ def main(quick: bool = False) -> None:
         rr = session.run(SF, scheme, "permutation",
                          f"transport(steps={steps},transport=tcp)", seed=5)
         _emit_cell(f"fig14/tcp-balancing/{label}", rr)
+
+    # ---- scan step cost (CI-guarded): warm per-step time, paths
+    # precomputed once in _prepare so it is independent of max_hops ------
+    from repro.core import transport as TP
+
+    topo = session.topology(SF)
+    lr = session.routing(SF, FATPATHS, seed=1).routing
+    wl = session.workload(SF, "permutation", seed=1)
+    n_steps = 400
+    cfg = TP.SimConfig(n_steps=n_steps)
+    us = timeit(lambda: TP.simulate(topo, lr, wl, cfg), n=3, warmup=1)
+    emit("transport/steptime/sf5",
+         dataclasses.replace(us, min_us=us.min_us / n_steps,
+                             median_us=us.median_us / n_steps),
+         f"steps={n_steps} n_flows={wl.n_flows}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,115 @@
+"""CI perf gate: fail when guarded benchmark timings regress.
+
+  PYTHONPATH=src python -m benchmarks.check_regression NEW.json \\
+      [--baseline BENCH_PR3.json] [--threshold 1.25]
+
+Compares ``us_per_call`` for the guarded key patterns below against the
+committed baseline (``BENCH_PR3.json``, produced by
+``python -m benchmarks.run --quick --json``).  A guarded key regresses
+when it is more than ``threshold`` times slower than the baseline after
+machine calibration; a guarded key MISSING from the new run also fails
+(renaming a guarded benchmark must not silently disable its gate).
+
+Because the committed baseline and the CI runner are different
+machines, raw microseconds are not comparable; both runs are normalised
+by a calibration key (default: the ``kernels/pathcount`` row — a plain
+jitted XLA matmul whose speed tracks the machine, not this repo's hot
+paths).  Regenerate the baseline with
+``python -m benchmarks.run --quick --json BENCH_PR3.json`` whenever a
+guarded benchmark's workload deliberately changes.
+
+Guarded:
+  * ``fig12/disjoint/…``        — bench_layers COLD layer-stack builds
+                                  (the batched semiring build path);
+  * ``transport/steptime/…``    — bench_transport per-step scan cost
+                                  (paths precomputed outside the scan).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+GUARDED = [r"^fig12/disjoint/", r"^transport/steptime/"]
+CALIBRATE = r"^kernels/pathcount/"
+
+
+def _calibration(baseline: dict, new: dict) -> float:
+    """new-machine / baseline-machine speed factor from the calibration
+    key (1.0 when it is missing on either side)."""
+    pat = re.compile(CALIBRATE)
+    for name in sorted(baseline):
+        if pat.search(name) and name in new:
+            b = float(baseline[name]["us_per_call"])
+            v = float(new[name]["us_per_call"])
+            if b > 0 and v > 0:
+                return v / b
+    return 1.0
+
+
+def compare(baseline: dict, new: dict, threshold: float):
+    """Returns (failures, rows, missing): guarded keys over threshold,
+    all guarded comparisons as (name, base_us, new_us, calibrated
+    ratio), and guarded keys absent from the new run."""
+    guard = re.compile("|".join(GUARDED))
+    cal = _calibration(baseline, new)
+    rows = []
+    failures = []
+    missing = []
+    for name, base in sorted(baseline.items()):
+        if not guard.search(name):
+            continue
+        if name not in new:
+            missing.append(name)
+            continue
+        b = float(base["us_per_call"])
+        v = float(new[name]["us_per_call"])
+        ratio = v / (b * cal) if b > 0 else float("inf")
+        rows.append((name, b, v, ratio))
+        if ratio > threshold:
+            failures.append((name, b, v, ratio))
+    return failures, rows, missing, cal
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("new", help="bench --json output to check")
+    ap.add_argument("--baseline", default="BENCH_PR3.json")
+    ap.add_argument("--threshold", type=float, default=1.25)
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+
+    failures, rows, missing, cal = compare(baseline, new, args.threshold)
+    print(f"machine calibration factor: x{cal:.2f} ({CALIBRATE!r} key)")
+    for name, b, v, ratio in rows:
+        flag = " <-- REGRESSION" if ratio > args.threshold else ""
+        print(f"{name:45s} base={b:10.1f}us new={v:10.1f}us "
+              f"x{ratio:.2f} (calibrated){flag}")
+    for name in missing:
+        print(f"ERROR: guarded key {name!r} missing from new run",
+              file=sys.stderr)
+    if not rows:
+        print("ERROR: no guarded keys matched — baseline stale?",
+              file=sys.stderr)
+        return 1
+    if missing:
+        print(f"{len(missing)} guarded benchmark(s) missing — a guarded "
+              "key rename must update BENCH_PR3.json", file=sys.stderr)
+        return 1
+    if failures:
+        print(f"{len(failures)} guarded benchmark(s) regressed "
+              f">{(args.threshold - 1) * 100:.0f}%", file=sys.stderr)
+        return 1
+    print(f"perf gate OK ({len(rows)} guarded keys within "
+          f"{(args.threshold - 1) * 100:.0f}%)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -26,20 +26,34 @@ Forwarding is destination-based: ``nh[i, s, t]`` = next hop at router s for
 a packet tagged layer i, destination t.  Unreachable (layer, s, t) entries
 are -1; the load balancer (transport sim) only assigns flowlets to layers
 whose reach mask is set, and falls back to layer 0 otherwise (§C.3).
+
+Table construction is BATCHED: whatever the scheme, every layer's APSP +
+forwarding tables come out of ONE jitted device program built on the
+semiring engine (:mod:`repro.core.paths`, :mod:`repro.kernels.semiring`).
+The host only samples layer adjacencies (cheap, O(E) per layer) — and for
+``pi_min``/``ksp`` even that runs on device, because their sampling is
+coupled to previously built tables (usage bias) or to perturbed-weight
+(min, +) distances.  Tie-breaks use per-stack PRNG keys; the choice among
+equal-cost next hops is uniform, distribution-identical to the historical
+host-side ``rng.random`` scoring.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+import functools
+import time
+from typing import Dict, List, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import paths as paths_mod
 from .topology import Topology
 
-__all__ = ["LayeredRouting", "build_layers", "layer_disjoint_paths"]
+__all__ = ["LayeredRouting", "build_layers", "layer_disjoint_paths",
+           "layer_disjoint_paths_batch"]
 
 _UNREACH = 10_000
 
@@ -55,6 +69,7 @@ class LayeredRouting:
     reach: np.ndarray       # (L, N, N) bool
     pathlen: np.ndarray     # (L, N, N) int16 intra-layer shortest-path length
     layer_adj: np.ndarray   # (L, N, N) bool directed layer adjacency
+    build_stats: Optional[Dict[str, float]] = None  # wall-time split
 
     @property
     def n_layers(self) -> int:
@@ -66,49 +81,22 @@ class LayeredRouting:
     def validate_loop_free(self, n_samples: int = 200, seed: int = 0,
                            max_hops: int = 64) -> None:
         """Walk the tables for random (layer, s, t); every reachable entry
-        must hit t within max_hops (shortest-path forwarding => loop-free)."""
+        must hit t within max_hops (shortest-path forwarding => loop-free).
+        All samples walk in ONE batched table walk."""
         rng = np.random.default_rng(seed)
         L, N, _ = self.nh.shape
-        for _ in range(n_samples):
-            i = rng.integers(L)
-            s, t = rng.choice(N, size=2, replace=False)
-            if not self.reach[i, s, t]:
-                continue
-            cur, hops = s, 0
-            while cur != t:
-                nxt = self.nh[i, cur, t]
-                assert nxt >= 0, f"hole in layer {i} at ({cur}->{t})"
-                cur = int(nxt)
-                hops += 1
-                assert hops <= max_hops, f"loop in layer {i} ({s}->{t})"
-
-
-def _forwarding_from_dist(adj_dir: np.ndarray, dist: np.ndarray,
-                          seed: int, chunk: int = 64) -> np.ndarray:
-    """Vectorised single-next-hop table for a (possibly directed) graph."""
-    n = adj_dir.shape[0]
-    rng = np.random.default_rng(seed)
-    nh = np.full((n, n), -1, dtype=np.int32)
-    for s0 in range(0, n, chunk):
-        s1 = min(n, s0 + chunk)
-        # ok[s, u, t]: edge s->u exists and dist[u, t] == dist[s, t] - 1
-        ok = adj_dir[s0:s1, :, None] & (dist[None, :, :] == dist[s0:s1, None, :] - 1)
-        score = np.where(ok, rng.random(ok.shape, dtype=np.float32), -1.0)
-        best = score.argmax(axis=1).astype(np.int32)      # (chunk, t)
-        has = ok.any(axis=1)
-        nh[s0:s1] = np.where(has, best, -1)
-    idx = np.arange(n)
-    nh[idx, idx] = idx
-    return nh
-
-
-def _layer_tables(adj_dir: np.ndarray, seed: int, max_len: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    dist = np.asarray(
-        paths_mod.shortest_path_lengths(jnp.asarray(adj_dir), max_l=max_len))
-    reach = dist <= max_len
-    nh = _forwarding_from_dist(adj_dir, dist, seed)
-    pathlen = np.where(reach, dist, _UNREACH).astype(np.int16)
-    return nh, reach, pathlen
+        li = rng.integers(L, size=n_samples)
+        s = rng.integers(N, size=n_samples)
+        t = (s + 1 + rng.integers(N - 1, size=n_samples)) % N  # t != s
+        keep = self.reach[li, s, t]
+        li, s, t = li[keep], s[keep], t[keep]
+        seqs = paths_mod.walk_paths_layers(self.nh, li, s, t, max_hops)
+        holes = (seqs < 0).any(axis=1)
+        assert not holes.any(), \
+            f"hole in layer(s) {sorted(set(li[holes].tolist()))}"
+        stuck = seqs[:, -1] != t
+        assert not stuck.any(), \
+            f"loop in layer(s) {sorted(set(li[stuck].tolist()))}"
 
 
 def _rand_layer(adj: np.ndarray, rho: float, rng: np.random.Generator,
@@ -131,98 +119,155 @@ def _rand_layer(adj: np.ndarray, rho: float, rng: np.random.Generator,
     return out
 
 
-def _edge_usage(nh: np.ndarray, reach: np.ndarray, max_hops: int) -> np.ndarray:
-    """Count how many (s, t) pairs route over each directed edge."""
-    n = nh.shape[0]
-    s_idx, t_idx = np.nonzero(reach & ~np.eye(n, dtype=bool))
-    usage = np.zeros((n, n), dtype=np.int64)
-    cur = s_idx.astype(np.int64).copy()
-    tgt = t_idx.astype(np.int64)
-    for _ in range(max_hops):
-        active = cur != tgt
-        if not active.any():
-            break
-        nxt = nh[cur[active], tgt[active]].astype(np.int64)
-        good = nxt >= 0
-        np.add.at(usage, (cur[active][good], nxt[good]), 1)
-        new_cur = cur.copy()
-        upd = np.where(good, nxt, tgt[active])
-        new_cur[np.nonzero(active)[0]] = upd
-        cur = new_cur
-    return usage
+# -----------------------------------------------------------------------------
+# Single-program builders for the schemes whose sampling depends on
+# previously built tables (pi_min) or on weighted semiring distances (ksp).
+# -----------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("n_layers", "max_l"))
+def _pi_min_program(adj, nbr, iu, ju, key, n_layers, rho, max_l):
+    """The whole §5.3.2 build as one device program: a scan over layers
+    that samples each DAG biased against accumulated edge usage, builds
+    its tables, and folds the counting-semiring usage fixpoint back into
+    the next layer's sampling."""
+    n = adj.shape[0]
+    e = iu.shape[0]
+    k0, krest = jax.random.split(key)
+    nh0, reach0, dist0 = paths_mod._layer_tables_core(adj[None], nbr, k0,
+                                                      max_l)
+    usage0 = paths_mod._edge_usage_core(nh0[0], reach0[0], max_l)
+
+    def step(usage, k):
+        k_pi, k_keep, k_fw = jax.random.split(k, 3)
+        u_sym = usage + usage.T
+        mx = u_sym.max()
+        norm = jnp.where(mx > 0, u_sym / jnp.maximum(mx, 1e-30), 0.0)
+        pi = jax.random.permutation(k_pi, n)
+        # Edge keep-probability shrinks with historical usage but keeps
+        # expected density ~= rho.
+        raw = 1.0 - 0.75 * norm[iu, ju]
+        prob = raw * (rho * e / jnp.maximum(raw.sum(), 1e-9))
+        keep = jax.random.uniform(k_keep, (e,)) < jnp.clip(prob, 0.0, 1.0)
+        fwd = pi[iu] < pi[ju]
+        uu = jnp.where(fwd, iu, ju)
+        vv = jnp.where(fwd, ju, iu)
+        la = jnp.zeros((n, n), dtype=bool).at[uu, vv].set(keep)
+        nh, reach, dist = paths_mod._layer_tables_core(la[None], nbr, k_fw,
+                                                       max_l)
+        usage = usage + paths_mod._edge_usage_core(nh[0], reach[0], max_l)
+        return usage, (la, nh[0], reach[0], dist[0])
+
+    if n_layers > 1:
+        keys = jax.random.split(krest, n_layers - 1)
+        _, (las, nhs, reaches, dists) = jax.lax.scan(step, usage0, keys)
+        la_all = jnp.concatenate([adj[None], las])
+        nh_all = jnp.concatenate([nh0, nhs])
+        reach_all = jnp.concatenate([reach0, reaches])
+        dist_all = jnp.concatenate([dist0, dists])
+    else:
+        la_all, nh_all, reach_all, dist_all = adj[None], nh0, reach0, dist0
+    return la_all, nh_all, reach_all, dist_all
+
+
+@functools.partial(jax.jit, static_argnames=("n_layers", "max_l"))
+def _ksp_program(adj, nbr, key, n_layers, max_l):
+    """k-shortest-paths-style layers in one program: per-layer perturbed
+    edge weights, (min, +) semiring all-pairs distances, and next hops
+    minimising ``w[s, u] + D[u, t]`` over neighbors u."""
+    n = adj.shape[0]
+    idx = jnp.arange(n)
+    k0, kw = jax.random.split(key)
+    nh0, reach0, dist0 = paths_mod._layer_tables_core(adj[None], nbr, k0,
+                                                      max_l)
+    hop = dist0[0]
+    kk = n_layers - 1
+    u01 = jax.random.uniform(kw, (kk, n, n))
+    w = jnp.where(adj[None], 1.0 + 0.25 * u01, jnp.inf)
+    w = jnp.minimum(w, jnp.transpose(w, (0, 2, 1)))
+    w = w.at[:, idx, idx].set(0.0)
+    d = paths_mod._minplus_apsp_core(w, max_l)
+
+    has_edge = jnp.take_along_axis(adj, nbr, axis=1)          # (N, D)
+    rows = idx[:, None]
+
+    def one_layer(args):
+        w_l, d_l = args
+        w_nbr = jnp.take_along_axis(w_l, nbr, axis=1)         # (N, D)
+        cost = jnp.where(has_edge[:, :, None],
+                         w_nbr[:, :, None] + d_l[nbr], jnp.inf)
+        j = jnp.argmin(cost, axis=1)                          # (N, N)
+        best = nbr[rows, j].astype(jnp.int32)
+        nh = jnp.where(jnp.isfinite(cost.min(axis=1)), best, -1)
+        return nh.at[idx, idx].set(idx)
+
+    nh_extra = jax.lax.map(one_layer, (w, d))
+    nh_all = jnp.concatenate([nh0, nh_extra])
+    reach_all = jnp.broadcast_to((hop <= max_l)[None], (n_layers, n, n))
+    dist_all = jnp.broadcast_to(hop[None], (n_layers, n, n))
+    la_all = jnp.broadcast_to(adj[None], (n_layers, n, n))
+    return la_all, nh_all, reach_all, dist_all
 
 
 def build_layers(topo: Topology, n_layers: int, rho: float,
                  scheme: str = "rand", seed: int = 0,
                  max_len: Optional[int] = None) -> LayeredRouting:
-    """Construct the FatPaths layer stack (layer 0 = all links, minimal)."""
+    """Construct the FatPaths layer stack (layer 0 = all links, minimal).
+
+    All L layers' tables come from ONE batched device program; there is
+    no per-layer host loop for table construction.  ``build_stats`` on
+    the result records the host (adjacency sampling) vs device (semiring
+    table construction) wall-time split.
+    """
     adj = np.asarray(topo.adj, dtype=bool)
     n = adj.shape[0]
     if max_len is None:
         # Allow "almost minimal" detours: nominal diameter + slack.
         max_len = max(6, topo.diameter_nominal + 4)
     rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    nbr = jnp.asarray(paths_mod.neighbor_table(adj))
+    adj_j = jnp.asarray(adj)
 
-    layer_adjs: List[np.ndarray] = [adj.copy()]
-    if scheme in ("rand", "undir"):
-        for _ in range(n_layers - 1):
-            layer_adjs.append(_rand_layer(adj, rho, rng, oriented=(scheme == "rand")))
-    elif scheme == "pi_min":
-        # Build sequentially; bias sampling against accumulated edge usage.
-        usage = np.zeros((n, n), dtype=np.float64)
-        # Seed usage with the minimal-path layer's load.
-        nh0, reach0, _ = _layer_tables(adj, seed, max_len)
-        usage += _edge_usage(nh0, reach0, max_hops=max_len)
-        for li in range(n_layers - 1):
-            u_sym = usage + usage.T
-            if u_sym.max() > 0:
-                norm = u_sym / u_sym.max()
-            else:
-                norm = u_sym
-            pi = rng.permutation(n)
-            iu, ju = np.nonzero(np.triu(adj, 1))
-            # Edge keep-probability shrinks with historical usage but keeps
-            # expected density ~= rho.
-            raw = 1.0 - 0.75 * norm[iu, ju]
-            prob = raw * (rho * len(iu) / max(raw.sum(), 1e-9))
-            keep = rng.random(len(iu)) < np.clip(prob, 0.0, 1.0)
-            la = np.zeros((n, n), dtype=bool)
-            u, v = iu[keep], ju[keep]
-            fwd = pi[u] < pi[v]
-            uu = np.where(fwd, u, v)
-            vv = np.where(fwd, v, u)
-            la[uu, vv] = True
-            layer_adjs.append(la)
-            nh_i, reach_i, _ = _layer_tables(la, seed + 100 + li, max_len)
-            usage += _edge_usage(nh_i, reach_i, max_hops=max_len)
-    elif scheme == "spain":
-        for li in range(n_layers - 1):
-            root = int(rng.integers(n))
-            tree = _bfs_tree(adj, root, rng)
-            layer_adjs.append(tree)
-    elif scheme == "past":
-        for li in range(n_layers - 1):
-            layer_adjs.append(adj.copy())  # re-randomised tie-breaks below
+    t0 = time.perf_counter()
+    if scheme == "pi_min":
+        iu, ju = np.nonzero(np.triu(adj, 1))
+        t_dev = time.perf_counter()
+        la, nh, reach, dist = _pi_min_program(
+            adj_j, nbr, jnp.asarray(iu), jnp.asarray(ju), key, n_layers,
+            float(rho), max_len)
     elif scheme == "ksp":
-        for li in range(n_layers - 1):
-            layer_adjs.append(adj.copy())  # perturbed weights below
+        t_dev = time.perf_counter()
+        la, nh, reach, dist = _ksp_program(adj_j, nbr, key, n_layers,
+                                           max_len)
     else:
-        raise ValueError(f"unknown scheme {scheme!r}")
-
-    nhs, reaches, plens = [], [], []
-    for i, la in enumerate(layer_adjs):
-        if scheme == "ksp" and i > 0:
-            nh, reach, plen = _ksp_tables(adj, seed + 17 * i, max_len, rng)
+        layer_adjs: List[np.ndarray] = [adj.copy()]
+        if scheme in ("rand", "undir"):
+            for _ in range(n_layers - 1):
+                layer_adjs.append(
+                    _rand_layer(adj, rho, rng, oriented=(scheme == "rand")))
+        elif scheme == "spain":
+            for _ in range(n_layers - 1):
+                root = int(rng.integers(n))
+                layer_adjs.append(_bfs_tree(adj, root, rng))
+        elif scheme == "past":
+            for _ in range(n_layers - 1):
+                layer_adjs.append(adj.copy())  # re-randomised tie-breaks
         else:
-            nh, reach, plen = _layer_tables(la, seed + 17 * i, max_len)
-        nhs.append(nh)
-        reaches.append(reach)
-        plens.append(plen)
+            raise ValueError(f"unknown scheme {scheme!r}")
+        la = jnp.asarray(np.stack(layer_adjs))
+        t_dev = time.perf_counter()
+        nh, reach, dist = paths_mod._layer_tables_program(la, nbr, key,
+                                                          max_len)
+    jax.block_until_ready(nh)
+    t1 = time.perf_counter()
 
+    reach_np = np.asarray(reach)
+    pathlen = np.where(reach_np, np.asarray(dist), _UNREACH).astype(np.int16)
     return LayeredRouting(
         topo=topo, scheme=scheme, rho=rho,
-        nh=np.stack(nhs), reach=np.stack(reaches),
-        pathlen=np.stack(plens), layer_adj=np.stack(layer_adjs),
+        nh=np.asarray(nh), reach=reach_np,
+        pathlen=pathlen, layer_adj=np.asarray(la),
+        build_stats={"total_s": t1 - t0, "device_s": t1 - t_dev,
+                     "host_s": t_dev - t0},
     )
 
 
@@ -249,56 +294,14 @@ def _bfs_tree(adj: np.ndarray, root: int, rng: np.random.Generator) -> np.ndarra
     return tree
 
 
-def _ksp_tables(adj: np.ndarray, seed: int, max_len: int,
-                rng: np.random.Generator) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """k-shortest-paths-style layer: randomly perturbed edge weights spread
-    traffic over *near-minimal* paths.  Weighted shortest paths via repeated
-    (min, +) relaxation (Bellman-Ford on the weight matrix)."""
-    n = adj.shape[0]
-    w = np.where(adj, 1.0 + 0.25 * rng.random((n, n)), np.inf)
-    w = np.minimum(w, w.T)
-    np.fill_diagonal(w, 0.0)
-    dist = w.copy()
-    for _ in range(max_len):
-        # (min,+) product, chunked to bound memory.
-        new = dist.copy()
-        for s0 in range(0, n, 128):
-            s1 = min(n, s0 + 128)
-            new[s0:s1] = np.minimum(
-                new[s0:s1], (dist[s0:s1, :, None] + w[None, :, :]).min(axis=1))
-        if np.allclose(new, dist):
-            break
-        dist = new
-    hop = np.asarray(paths_mod.shortest_path_lengths(jnp.asarray(adj), max_l=max_len))
-    reach = hop <= max_len
-    # next hop: neighbor minimising w[s,u] + dist[u,t], random tie-break.
-    nh = np.full((n, n), -1, dtype=np.int32)
-    for s in range(n):
-        cost = w[s][:, None] + dist  # (u, t)
-        cost[~adj[s]] = np.inf
-        best = cost.argmin(axis=0).astype(np.int32)
-        nh[s] = np.where(np.isfinite(cost.min(axis=0)), best, -1)
-    idx = np.arange(n)
-    nh[idx, idx] = idx
-    plen = np.where(reach, hop, _UNREACH).astype(np.int16)
-    return nh, reach, plen
-
-
-def layer_disjoint_paths(lr: LayeredRouting, s: int, t: int,
-                         max_hops: int = 16) -> int:
-    """How many pairwise edge-disjoint (s->t) paths do the layers realise?
-
-    Greedy: walk each usable layer's path, keep it if it shares no
-    (undirected) edge with already-kept paths.  This is the quantity behind
-    the paper's "nine layers suffice for three disjoint paths" (Fig 12).
-    """
+def _greedy_disjoint(paths: np.ndarray, reach_lt: np.ndarray, t: int) -> int:
+    """Greedy edge-disjoint count over one (L, max_hops+1) path batch."""
     kept_edges = set()
     count = 0
-    for i in range(lr.n_layers):
-        if not lr.reach[i, s, t]:
+    for i in range(paths.shape[0]):
+        if not reach_lt[i]:
             continue
-        path = paths_mod.walk_paths(lr.nh[i], np.array([s]), np.array([t]),
-                                    max_hops)[0]
+        path = paths[i]
         edges = set()
         ok = True
         reached = False
@@ -323,3 +326,37 @@ def layer_disjoint_paths(lr: LayeredRouting, s: int, t: int,
             kept_edges |= edges
             count += 1
     return count
+
+
+def layer_disjoint_paths_batch(lr: LayeredRouting, s: np.ndarray,
+                               t: np.ndarray, max_hops: int = 16
+                               ) -> np.ndarray:
+    """:func:`layer_disjoint_paths` for many (s, t) pairs: ALL
+    (pair, layer) table walks happen in one batched call; only the cheap
+    greedy edge-disjointness filter stays per pair."""
+    s = np.asarray(s, dtype=np.int32)
+    t = np.asarray(t, dtype=np.int32)
+    n_pairs = len(s)
+    L = lr.n_layers
+    li = np.tile(np.arange(L, dtype=np.int32), n_pairs)
+    ss = np.repeat(s, L)
+    tt = np.repeat(t, L)
+    walks = paths_mod.walk_paths_layers(lr.nh, li, ss, tt, max_hops)
+    walks = walks.reshape(n_pairs, L, max_hops + 1)
+    out = np.zeros(n_pairs, dtype=np.int64)
+    for p in range(n_pairs):
+        out[p] = _greedy_disjoint(walks[p], lr.reach[:, s[p], t[p]],
+                                  int(t[p]))
+    return out
+
+
+def layer_disjoint_paths(lr: LayeredRouting, s: int, t: int,
+                         max_hops: int = 16) -> int:
+    """How many pairwise edge-disjoint (s->t) paths do the layers realise?
+
+    Greedy: walk each usable layer's path, keep it if it shares no
+    (undirected) edge with already-kept paths.  This is the quantity behind
+    the paper's "nine layers suffice for three disjoint paths" (Fig 12).
+    """
+    return int(layer_disjoint_paths_batch(lr, np.array([s]), np.array([t]),
+                                          max_hops)[0])

@@ -1,13 +1,24 @@
 """Path analysis via adjacency-matrix algebra (paper Appendix B.1).
 
-All heavy routines are JAX programs (vectorised boolean / counting matrix
-multiplication); on TPU the counting products route through the Pallas
-``pathcount`` kernel (see ``repro.kernels.pathcount``); the jnp expressions
-here are its oracle semantics.
+All heavy routines are JAX programs expressed as *semiring* matrix
+products through :mod:`repro.kernels.semiring` — boolean OR/AND for
+reachability, saturating f32 counting for walk multiplicities, (min, +)
+for weighted distances.  On TPU the products route through the tiled
+Pallas kernel; on CPU they lower to XLA's native (batched) matmul via
+the jnp oracle in ``kernels/ref.py``.
 
-Counts are held in f32 and *saturate*: they are exact below 2**24, which is
-far beyond every threshold the paper's diversity metrics use (the paper
-cares about counts in the range 1..k' ~ tens).
+The batched entry points (``apsp_batched``, ``forwarding_batched``,
+``layer_tables_batched``, ``minplus_apsp_batched``, ``edge_usage_batched``)
+operate on an (L, N, N) stack of layer adjacencies in ONE device program
+— this is what lets :func:`repro.core.layers.build_layers` construct a
+whole FatPaths layer stack without a per-layer host loop.  Random
+tie-breaks use per-layer PRNG keys on device (uniform choice among
+equal-cost next hops, distribution-identical to the historical
+host-side ``rng.random`` scoring).
+
+Counts are held in f32 and *saturate*: they are exact below 2**24, which
+is far beyond every threshold the paper's diversity metrics use (the
+paper cares about counts in the range 1..k' ~ tens).
 """
 
 from __future__ import annotations
@@ -19,8 +30,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels.semiring import semiring_matmul
+
 __all__ = [
     "shortest_path_lengths",
+    "apsp_batched",
+    "forwarding_batched",
+    "layer_tables_batched",
+    "minplus_apsp_batched",
+    "edge_usage_batched",
     "diameter",
     "average_path_length",
     "path_counts_exact_length",
@@ -28,9 +46,195 @@ __all__ = [
     "next_hop_options",
     "build_forwarding",
     "walk_paths",
+    "walk_paths_layers",
 ]
 
-_SAT = jnp.float32(3.0e38)
+
+# -----------------------------------------------------------------------------
+# Batched cores (traceable; shared by the jitted entry points below and by
+# the single-program layer builders in repro.core.layers).
+# -----------------------------------------------------------------------------
+def _apsp_core(adj: jnp.ndarray, max_l: int) -> jnp.ndarray:
+    """(L, N, N) bool adjacency stack -> (L, N, N) int32 distances via
+    boolean-semiring frontier products; unreachable pairs get max_l + 1."""
+    _, n, _ = adj.shape
+    eye = jnp.eye(n, dtype=bool)
+    dist0 = jnp.where(eye[None], 0,
+                      jnp.where(adj, 1, max_l + 1)).astype(jnp.int32)
+    reach0 = adj | eye[None]
+
+    def body(state):
+        dist, reach, l, _ = state
+        nreach = semiring_matmul(reach, adj, "bool")
+        newly = nreach & ~reach
+        dist = jnp.where(newly & (dist > l + 1), l + 1, dist)
+        return dist, reach | nreach, l + 1, newly.any()
+
+    def cond(state):
+        return jnp.logical_and(state[3], state[2] < max_l)
+
+    dist, _, _, _ = jax.lax.while_loop(
+        cond, body, (dist0, reach0, jnp.int32(1), jnp.bool_(True)))
+    return dist
+
+
+def neighbor_table(adj_union: np.ndarray) -> np.ndarray:
+    """(N, Dmax) int32 padded neighbor-index table for a (union)
+    adjacency.  Entry ``nbr[s, j]`` is the j-th neighbor of s; pad slots
+    hold non-neighbor ids and are masked out by the per-layer adjacency
+    gather.  This is what keeps forwarding construction at
+    O(N * Dmax * N) instead of O(N^3): next-hop candidates are always
+    neighbors, and Dmax = k' << N."""
+    a = np.asarray(adj_union, dtype=bool)
+    dmax = max(1, int(a.sum(axis=1).max()))
+    # stable argsort puts neighbors (True) first in ascending-id order
+    return np.argsort(~a, axis=1, kind="stable")[:, :dmax].astype(np.int32)
+
+
+def _forwarding_core(adj: jnp.ndarray, dist: jnp.ndarray, nbr: jnp.ndarray,
+                     key: jnp.ndarray) -> jnp.ndarray:
+    """Single-next-hop tables for an (L, N, N) stack, on device.
+
+    For each (layer, s, t) the next hop is chosen *uniformly at random*
+    among the equal-cost candidates ``{u in nbr[s] : adj[s, u],
+    dist[u, t] == dist[s, t] - 1}`` by picking the r-th valid candidate,
+    with r drawn from one per-(s, t) uniform — one random number per
+    table entry, one PRNG stream per layer stack.
+    """
+    L, n, _ = adj.shape
+    u01 = jax.random.uniform(key, (L, n, n))
+    rows = jnp.arange(n)[:, None]
+
+    def one_layer(args):
+        adj_l, dist_l, u_l = args
+        has_edge = jnp.take_along_axis(adj_l, nbr, axis=1)   # (N, D)
+        dist_nbr = dist_l[nbr]                               # (N, D, N)
+        # ok[s, j, t]: edge s->nbr[s,j] in this layer, one hop closer to t.
+        ok = has_edge[:, :, None] & (dist_nbr + 1 == dist_l[:, None, :])
+        cnt = ok.sum(axis=1)                                 # (N, N)
+        r = jnp.clip((u_l * cnt).astype(jnp.int32), 0,
+                     jnp.maximum(cnt - 1, 0))
+        csum = jnp.cumsum(ok.astype(jnp.int32), axis=1)
+        pick = ok & (csum == (r + 1)[:, None, :])
+        j = jnp.argmax(pick, axis=1)                         # (N, N)
+        nh = nbr[rows, j].astype(jnp.int32)
+        return jnp.where(cnt > 0, nh, -1)
+
+    nh = jax.lax.map(one_layer, (adj, dist, u01))
+    idx = jnp.arange(n)
+    return nh.at[:, idx, idx].set(idx)
+
+
+def _minplus_apsp_core(w: jnp.ndarray, max_l: int) -> jnp.ndarray:
+    """All-pairs weighted distances for a (K, N, N) weight stack (+inf
+    non-edges, 0 diagonal) by repeated (min, +) squaring: after i
+    squarings paths of up to 2**i hops are covered, and with unit-ish
+    weights (>= 1) no shortest path uses more than ~1.25 * max_l hops."""
+    iters = max(1, int(np.ceil(np.log2(1.25 * max_l + 1))))
+    d = w
+    for _ in range(iters):
+        d = semiring_matmul(d, d, "minplus")
+    return d
+
+
+def _edge_usage_core(nh: jnp.ndarray, reach: jnp.ndarray,
+                     max_hops: int) -> jnp.ndarray:
+    """Per-edge count of (s, t) pairs routed over each directed edge.
+
+    Counting-semiring fixpoint instead of a host-side table walk: for a
+    destination t the forwarding column is a tree, and the number of
+    sources crossing edge (u, nh[u, t]) is the subtree size
+    ``c[u, t] = r[u, t] + sum_{v : nh[v, t] = u} c[v, t]`` with
+    ``r = reach & off-diagonal``.  ``max_hops`` iterations of the linear
+    map converge because no source sits deeper than the longest path.
+    """
+    n = nh.shape[0]
+    eye = jnp.eye(n, dtype=bool)
+    valid = (nh >= 0) & reach & ~eye
+    r = (reach & ~eye).astype(jnp.float32)
+    tgt = jnp.clip(nh, 0)
+    tcols = jnp.broadcast_to(jnp.arange(n)[None, :], (n, n))
+
+    def body(_, c):
+        contrib = jnp.where(valid, c, 0.0)
+        return r + jnp.zeros_like(c).at[tgt, tcols].add(contrib)
+
+    c = jax.lax.fori_loop(0, max_hops, body, jnp.zeros((n, n), jnp.float32))
+    rows = jnp.broadcast_to(jnp.arange(n)[:, None], (n, n))
+    return jnp.zeros((n, n), jnp.float32).at[rows, tgt].add(
+        jnp.where(valid, c, 0.0))
+
+
+def _layer_tables_core(adj: jnp.ndarray, nbr: jnp.ndarray, key: jnp.ndarray,
+                       max_l: int
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    dist = _apsp_core(adj, max_l)
+    nh = _forwarding_core(adj, dist, nbr, key)
+    reach = dist <= max_l
+    return nh, reach, dist
+
+
+# -----------------------------------------------------------------------------
+# Jitted batched entry points.
+# -----------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("max_l",))
+def apsp_batched(adj: jnp.ndarray, max_l: int = 64) -> jnp.ndarray:
+    """All-pairs shortest path lengths for an (L, N, N) adjacency stack in
+    one device program; unreachable pairs get ``max_l + 1``."""
+    return _apsp_core(adj.astype(jnp.bool_), max_l)
+
+
+@jax.jit
+def _forwarding_program(adj, dist, nbr, key):
+    return _forwarding_core(adj.astype(jnp.bool_), dist, nbr, key)
+
+
+def forwarding_batched(adj: jnp.ndarray, dist: jnp.ndarray,
+                       key: jnp.ndarray) -> jnp.ndarray:
+    """Random-tie-break forwarding tables for an (L, N, N) stack; ``key``
+    seeds the per-entry uniform choice (one PRNG stream for the stack)."""
+    nbr = jnp.asarray(neighbor_table(np.asarray(adj).any(axis=0)))
+    return _forwarding_program(jnp.asarray(adj), jnp.asarray(dist), nbr, key)
+
+
+@functools.partial(jax.jit, static_argnames=("max_l",))
+def _layer_tables_program(adj, nbr, key, max_l):
+    return _layer_tables_core(adj.astype(jnp.bool_), nbr, key, max_l)
+
+
+def layer_tables_batched(adj: jnp.ndarray, key: jnp.ndarray, max_l: int
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """APSP + forwarding for a whole layer stack: ONE device program.
+
+    Returns ``(nh, reach, dist)`` each (L, N, N).  The host's only job is
+    the (N, Dmax) union neighbor table; APSP and every table entry are
+    computed in a single jitted call.
+    """
+    adj_np = np.asarray(adj, dtype=bool)
+    nbr = jnp.asarray(neighbor_table(adj_np.any(axis=0)))
+    return _layer_tables_program(jnp.asarray(adj_np), nbr, key, max_l)
+
+
+@functools.partial(jax.jit, static_argnames=("max_l",))
+def minplus_apsp_batched(w: jnp.ndarray, max_l: int) -> jnp.ndarray:
+    """(min, +) all-pairs distances for a (K, N, N) weight stack.
+
+    Precondition: edge weights are >= 1 (+inf for non-edges, 0 diagonal)
+    and every hop-distance is <= ``max_l`` — the squaring count is sized
+    for shortest weighted paths of at most ~1.25 * max_l hops, which is
+    what the ``ksp`` scheme's 1 + 0.25*U(0,1) perturbed unit weights
+    guarantee.  Sub-unit weights would admit longer optimal paths than
+    the iteration covers and silently overestimate distances.
+    """
+    return _minplus_apsp_core(w.astype(jnp.float32), max_l)
+
+
+@functools.partial(jax.jit, static_argnames=("max_hops",))
+def edge_usage_batched(nh: jnp.ndarray, reach: jnp.ndarray,
+                       max_hops: int) -> jnp.ndarray:
+    """Directed-edge usage counts for an (L, N, N) table stack (f32,
+    exact below 2**24)."""
+    return jax.vmap(lambda a, b: _edge_usage_core(a, b, max_hops))(nh, reach)
 
 
 @functools.partial(jax.jit, static_argnames=("max_l",))
@@ -45,24 +249,7 @@ def shortest_path_lengths(adj: jnp.ndarray, max_l: int = 64) -> jnp.ndarray:
       (N, N) int32 distance matrix; unreachable pairs get ``max_l + 1``;
       diagonal is 0.
     """
-    n = adj.shape[0]
-    a = adj.astype(jnp.bool_)
-    dist0 = jnp.where(jnp.eye(n, dtype=bool), 0, jnp.where(a, 1, max_l + 1))
-
-    def body(state):
-        dist, reach, l, changed = state
-        nreach = (reach.astype(jnp.float32) @ a.astype(jnp.float32)) > 0
-        newly = nreach & ~reach
-        dist = jnp.where(newly & (dist > l + 1), l + 1, dist)
-        return dist, reach | nreach, l + 1, newly.any()
-
-    def cond(state):
-        _, _, l, changed = state
-        return jnp.logical_and(changed, l < max_l)
-
-    reach0 = a | jnp.eye(n, dtype=bool)
-    dist, _, _, _ = jax.lax.while_loop(cond, body, (dist0.astype(jnp.int32), reach0, jnp.int32(1), jnp.bool_(True)))
-    return dist
+    return _apsp_core(adj.astype(jnp.bool_)[None], max_l)[0]
 
 
 def diameter(adj: np.ndarray, max_l: int = 64) -> int:
@@ -80,12 +267,29 @@ def average_path_length(adj: np.ndarray, max_l: int = 64) -> float:
 
 @functools.partial(jax.jit, static_argnames=("l",))
 def path_counts_exact_length(adj: jnp.ndarray, l: int) -> jnp.ndarray:
-    """Number of length-``l`` walks between every pair (Theorem 1), saturating f32."""
+    """Number of length-``l`` walks between every pair (Theorem 1),
+    saturating-count semiring powers."""
     a = adj.astype(jnp.float32)
     out = a
     for _ in range(l - 1):
-        out = jnp.minimum(out @ a, _SAT)
+        out = semiring_matmul(out, a, "count")
     return out
+
+
+@functools.partial(jax.jit, static_argnames=("max_l",))
+def _min_path_stats_jit(adj: jnp.ndarray, max_l: int
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(dist, counts-of-shortest-walks) with the masked select done on
+    device — one fetch for the whole result instead of one (N, N)
+    transfer per candidate length."""
+    dist = _apsp_core(adj.astype(jnp.bool_)[None], max_l)[0]
+    a = adj.astype(jnp.float32)
+    counts = jnp.where(dist == 1, a, 0.0)
+    cur = a
+    for l in range(2, max_l + 1):
+        cur = semiring_matmul(cur, a, "count")
+        counts = jnp.where(dist == l, cur, counts)
+    return dist, counts
 
 
 def min_path_stats(adj: np.ndarray, max_l: int = 8) -> Tuple[np.ndarray, np.ndarray]:
@@ -94,20 +298,8 @@ def min_path_stats(adj: np.ndarray, max_l: int = 8) -> Tuple[np.ndarray, np.ndar
     c_min counts *shortest walks*, which for the minimal length equal
     shortest paths (no repeated vertex fits in a minimal walk).
     """
-    adj_j = jnp.asarray(adj)
-    dist = np.asarray(shortest_path_lengths(adj_j, max_l=max_l))
-    n = adj.shape[0]
-    counts = np.zeros((n, n), dtype=np.float64)
-    power = jnp.asarray(adj, dtype=jnp.float32)
-    a = jnp.asarray(adj, dtype=jnp.float32)
-    cur = power
-    for l in range(1, max_l + 1):
-        mask = dist == l
-        if mask.any():
-            counts[mask] = np.asarray(cur)[mask]
-        if l < max_l:
-            cur = jnp.minimum(cur @ a, _SAT)
-    return dist, counts
+    dist, counts = _min_path_stats_jit(jnp.asarray(adj), max_l)
+    return np.asarray(dist), np.asarray(counts, dtype=np.float64)
 
 
 def next_hop_options(adj: np.ndarray, dist: Optional[np.ndarray] = None,
@@ -139,25 +331,18 @@ def build_forwarding(adj: np.ndarray, dist: Optional[np.ndarray] = None,
     Returns (N, N) int32 ``nh[s, t]`` = next router from s towards t
     (``nh[t, t] = t``); a random choice among equal-cost options, matching
     the paper's "choose a random first step port if there are multiple".
-    Unreachable pairs get -1.
+    Unreachable pairs get -1.  The L=1 case of :func:`forwarding_batched`.
     """
     a = np.asarray(adj, dtype=bool)
-    n = a.shape[0]
     if dist is None:
-        dist = np.asarray(shortest_path_lengths(jnp.asarray(a), max_l=max_l))
-    rng = np.random.default_rng(seed)
-    nh = np.full((n, n), -1, dtype=np.int32)
-    for s in range(n):
-        # (u, t): u neighbor of s on a shortest path to t; random tie-break.
-        ok = a[s][:, None] & (dist == dist[s][None, :] - 1)
-        score = np.where(ok, rng.random((n, n)), -1.0)
-        best = score.argmax(axis=0)
-        has = ok.any(axis=0)
-        nh[s] = np.where(has, best, -1)
-        nh[s, s] = s
-    reach = dist <= max_l
+        dist_j = shortest_path_lengths(jnp.asarray(a), max_l=max_l)
+    else:
+        dist_j = jnp.asarray(dist, dtype=jnp.int32)
+    nh = np.asarray(forwarding_batched(a[None], dist_j[None],
+                                       jax.random.PRNGKey(seed))[0]).copy()
+    reach = np.asarray(dist_j) <= max_l
     nh[~reach] = -1
-    np.fill_diagonal(nh, np.arange(n))
+    np.fill_diagonal(nh, np.arange(a.shape[0]))
     return nh
 
 
@@ -173,13 +358,28 @@ def walk_paths(nh: np.ndarray, s: np.ndarray, t: np.ndarray, max_hops: int) -> n
       (F, max_hops + 1) int32 router ids; after reaching t the sequence
       repeats t.  A -1 appears if the table cannot route.
     """
+    return walk_paths_layers(np.asarray(nh)[None],
+                             np.zeros(len(np.atleast_1d(s)), dtype=np.int32),
+                             s, t, max_hops)
+
+
+def walk_paths_layers(nh_stack: np.ndarray, layer: np.ndarray, s: np.ndarray,
+                      t: np.ndarray, max_hops: int) -> np.ndarray:
+    """Walk per-sample forwarding tables: sample i follows layer
+    ``layer[i]`` of ``nh_stack``.  One vectorised walk for the whole
+    (sample, layer) batch — no per-sample Python loop.
+
+    Returns (F, max_hops + 1) int32 router sequences (semantics of
+    :func:`walk_paths`).
+    """
+    layer = np.asarray(layer, dtype=np.int32)
     s = np.asarray(s, dtype=np.int32)
     t = np.asarray(t, dtype=np.int32)
     out = np.zeros((len(s), max_hops + 1), dtype=np.int32)
     cur = s.copy()
     out[:, 0] = cur
     for h in range(1, max_hops + 1):
-        nxt = nh[cur, t]
+        nxt = nh_stack[layer, np.maximum(cur, 0), t]
         dead = (nxt < 0) | (cur < 0)
         cur = np.where(dead, -1, np.where(cur == t, t, nxt)).astype(np.int32)
         out[:, h] = cur

@@ -98,29 +98,69 @@ class SimResult:
 def ecmp_routing(topo: Topology, n_tables: int = 8, seed: int = 0,
                  max_len: Optional[int] = None) -> LayeredRouting:
     """Minimal-path-only multi-table routing: n differently tie-broken
-    shortest-path tables (flow-hash ECMP / LetFlow substrate)."""
+    shortest-path tables (flow-hash ECMP / LetFlow substrate).  All n
+    tables come out of one batched forwarding program (APSP is shared:
+    every table sees the same full-graph distances)."""
+    import time
+
     from . import paths as paths_mod
 
     adj = np.asarray(topo.adj, dtype=bool)
     if max_len is None:
         max_len = max(6, topo.diameter_nominal + 2)
-    dist = np.asarray(
-        paths_mod.shortest_path_lengths(jnp.asarray(adj), max_l=max_len))
+    t0 = time.perf_counter()
+    nbr = jnp.asarray(paths_mod.neighbor_table(adj))
+    stack = jnp.asarray(np.broadcast_to(adj[None], (n_tables,) + adj.shape))
+    t_dev = time.perf_counter()
+    dist_j = paths_mod.shortest_path_lengths(jnp.asarray(adj), max_l=max_len)
+    nh = paths_mod._forwarding_program(
+        stack, jnp.broadcast_to(dist_j[None], stack.shape), nbr,
+        jax.random.PRNGKey(seed))
+    nh = np.asarray(jax.block_until_ready(nh)).copy()
+    t1 = time.perf_counter()
+    dist = np.asarray(dist_j)
     reach = dist <= max_len
-    nhs = [paths_mod.build_forwarding(adj, dist, seed=seed + i)
-           for i in range(n_tables)]
+    nh[:, ~reach] = -1
+    idx = np.arange(adj.shape[0])
+    nh[:, idx, idx] = idx
     plen = np.where(reach, dist, 10_000).astype(np.int16)
+    t2 = time.perf_counter()
     return LayeredRouting(
         topo=topo, scheme="ecmp", rho=1.0,
-        nh=np.stack(nhs), reach=np.stack([reach] * n_tables),
+        nh=nh, reach=np.stack([reach] * n_tables),
         pathlen=np.stack([plen] * n_tables),
         layer_adj=np.stack([adj] * n_tables),
+        build_stats={"total_s": t2 - t0, "device_s": t1 - t_dev,
+                     "host_s": (t_dev - t0) + (t2 - t1)},
     )
+
+
+@functools.partial(jax.jit, static_argnames=("max_hops",))
+def _path_edge_tensor(nh, eix, src_r, dst_r, max_hops):
+    """Walk every layer's table once, ahead of the scan: (L, F, max_hops)
+    directed fabric edge ids along each flow's path in each layer (-1
+    padding once the destination router is reached) plus an (L, F)
+    routed-ok mask.  The per-step scan work then collapses from
+    ``max_hops`` sequential gathers to ONE gather by current layer."""
+
+    def one_layer(nh_l):
+        def hop(cur, _):
+            nxt = nh_l[cur, dst_r]
+            at_dst = cur == dst_r
+            hole = nxt < 0
+            e = jnp.where(at_dst | hole, -1,
+                          eix[cur, jnp.where(hole, cur, nxt)])
+            return jnp.where(at_dst | hole, cur, nxt), e
+        cur, es = jax.lax.scan(hop, src_r, None, length=max_hops)
+        return es.T, cur == dst_r                      # (F, H), (F,)
+
+    return jax.vmap(one_layer)(nh)
 
 
 def _prepare(topo: Topology, routing: LayeredRouting, wl: FlowWorkload,
              cfg: SimConfig):
-    """Static arrays for the scan."""
+    """Static arrays for the scan — including the per-layer path-edge
+    tensor, so the scan body never re-derives flow paths."""
     eix = topo.edge_index_matrix()              # (N, N) -> directed edge id
     n_edges = int((eix >= 0).sum())
     n_ep = wl.src.max() + 1 if len(wl.src) else 1
@@ -130,41 +170,42 @@ def _prepare(topo: Topology, routing: LayeredRouting, wl: FlowWorkload,
     e_inj = n_edges
     e_ej = n_edges + n_ep
     e_tot = n_edges + 2 * n_ep + 1
+    src_r = jnp.asarray(wl.src_router)
+    dst_r = jnp.asarray(wl.dst_router)
+    edges, routed = _path_edge_tensor(jnp.asarray(routing.nh),
+                                      jnp.asarray(eix), src_r, dst_r,
+                                      cfg.max_hops)
+    # Trim the hop axis to the longest realised path: the per-step cost
+    # then tracks actual path lengths, not the cfg.max_hops cap (padding
+    # is all -1 beyond the longest path by construction).
+    hmax = max(1, int((edges >= 0).sum(axis=2).max())) if edges.size else 1
+    edges = edges[:, :, :hmax]
+    n_flows = len(wl.src)
+    src_e = jnp.asarray(wl.src + e_inj)
+    dst_e = jnp.asarray(wl.dst + e_ej)
+    n_layers = routing.nh.shape[0]
+    # (L, F, H+2): fabric hops + injection + ejection NIC per layer.
+    path_edges = jnp.concatenate(
+        [edges,
+         jnp.broadcast_to(src_e[None, :, None], (n_layers, n_flows, 1)),
+         jnp.broadcast_to(dst_e[None, :, None], (n_layers, n_flows, 1))],
+        axis=2)
+    usable = jnp.asarray(routing.reach)[:, src_r, dst_r].T   # (F, L)
     return dict(
-        nh=jnp.asarray(routing.nh),                    # (L, N, N)
-        reach=jnp.asarray(routing.reach),              # (L, N, N)
-        eix=jnp.asarray(eix),                          # (N, N)
-        src_r=jnp.asarray(wl.src_router),
-        dst_r=jnp.asarray(wl.dst_router),
-        src_e=jnp.asarray(wl.src + e_inj),
-        dst_e=jnp.asarray(wl.dst + e_ej),
+        path_edges=path_edges,                         # (L, F, H+2)
+        routed=routed,                                 # (L, F)
+        path_hops=(edges >= 0).sum(axis=2).astype(jnp.float32),  # (L, F)
+        usable=usable,
         size=jnp.asarray(wl.size, dtype=jnp.float32),
         start=jnp.asarray(wl.start, dtype=jnp.float32),
         e_tot=e_tot,
-        n_layers=routing.nh.shape[0],
+        n_layers=n_layers,
     )
 
 
-def _flow_edges(nh, eix, layer, src_r, dst_r, max_hops):
-    """(F, max_hops) directed fabric edge ids along each flow's current path
-    (-1 padding once the destination router is reached)."""
-    f = src_r.shape[0]
-    cur = src_r
-    ids = []
-    for _ in range(max_hops):
-        nxt = nh[layer, cur, dst_r]                    # (F,)
-        at_dst = cur == dst_r
-        hole = nxt < 0
-        e = jnp.where(at_dst | hole, -1, eix[cur, jnp.where(hole, cur, nxt)])
-        ids.append(e)
-        cur = jnp.where(at_dst | hole, cur, nxt)
-    return jnp.stack(ids, axis=1), cur == dst_r        # (F, H), routed ok
-
-
-def _pick_layers(key, reach, src_r, dst_r, minimal_only_mask, n_layers):
+def _pick_layers(key, usable, minimal_only_mask):
     """Uniform choice among usable layers per flow (layer 0 fallback)."""
-    usable = reach[:, src_r, dst_r].T                  # (F, L)
-    usable = usable & minimal_only_mask[None, :]
+    usable = usable & minimal_only_mask[None, :]       # (F, L)
     g = jax.random.gumbel(key, usable.shape)
     g = jnp.where(usable, g, -jnp.inf)
     pick = jnp.argmax(g, axis=1).astype(jnp.int32)
@@ -182,8 +223,7 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
     reroute = cfg.balancing in ("letflow", "fatpaths")
 
     k_init, k_scan = jax.random.split(key0)
-    layer0 = _pick_layers(k_init, arrs["reach"], arrs["src_r"], arrs["dst_r"],
-                          minimal_only, n_layers)
+    layer0 = _pick_layers(k_init, arrs["usable"], minimal_only)
 
     if cfg.transport == "ndp":
         rate0 = jnp.ones(f, dtype=jnp.float32)         # line rate start
@@ -209,12 +249,12 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
         done = state["remaining"] <= 0
         active = started & ~done
 
-        edges, routed = _flow_edges(arrs["nh"], arrs["eix"], state["layer"],
-                                    arrs["src_r"], arrs["dst_r"], cfg.max_hops)
-        n_hops = (edges >= 0).sum(axis=1).astype(jnp.float32)
-        # Full edge set per flow: fabric hops + injection + ejection NIC.
-        all_edges = jnp.concatenate(
-            [edges, arrs["src_e"][:, None], arrs["dst_e"][:, None]], axis=1)
+        # One gather by current layer replaces the per-step table walk:
+        # paths were materialised once in _prepare.
+        frows = jnp.arange(f)
+        all_edges = arrs["path_edges"][state["layer"], frows]   # (F, H+2)
+        routed = arrs["routed"][state["layer"], frows]
+        n_hops = arrs["path_hops"][state["layer"], frows]
         all_edges = jnp.where(active[:, None] & routed[:, None],
                               jnp.where(all_edges < 0, e_tot - 1, all_edges),
                               e_tot - 1)
@@ -266,8 +306,7 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
             p_gap = jnp.clip(cfg.dt / cfg.flowlet_gap
                              * (slack + cfg.gap_eps), 0.0, 1.0)
             roll = jax.random.uniform(k_gap, (f,)) < p_gap
-            newpick = _pick_layers(k_pick, arrs["reach"], arrs["src_r"],
-                                   arrs["dst_r"], minimal_only, n_layers)
+            newpick = _pick_layers(k_pick, arrs["usable"], minimal_only)
             layer = jnp.where(roll & active, newpick, state["layer"])
         else:
             layer = state["layer"]

@@ -6,8 +6,12 @@ workloads and :class:`~repro.dist.fabric.ClusterFabric` instances are
 built at most once, whatever order the cells run in.  ``ecmp`` and
 ``letflow`` cells share one minimal-table stack; a ``fabric`` evaluator
 cell reuses the very same layer stack its ``fatpaths`` transport sibling
-built.  ``session.stats`` counts builds vs hits, so tests (and curious
-users) can verify nothing is recomputed.
+built.  ``session.stats`` counts builds vs hits AND accumulates build
+wall time — ``build_wall_s`` overall, ``<kind>_build_s`` per artifact
+kind, and the device/host split (``build_device_s``/``build_host_s``)
+reported by the batched semiring layer builders — so sweeps can expose
+their build-vs-simulate split (each ``RunResult.meta`` carries the
+per-cell ``build_s`` / ``cache_hits`` / ``cache_builds``).
 """
 
 from __future__ import annotations
@@ -53,7 +57,18 @@ class Session:
             self.stats[f"{key[0]}_hit"] += 1
             return self._cache[key]
         self.stats[f"{key[0]}_build"] += 1
+        t0 = time.perf_counter()
         value = build()
+        dt = time.perf_counter() - t0
+        # Wall-time split: total per artifact kind, plus the device/host
+        # breakdown the batched layer builders report (Counter holds
+        # floats fine).
+        self.stats[f"{key[0]}_build_s"] += dt
+        self.stats["build_wall_s"] += dt
+        bs = getattr(value, "build_stats", None)
+        if isinstance(bs, dict):
+            self.stats["build_device_s"] += bs.get("device_s", 0.0)
+            self.stats["build_host_s"] += bs.get("host_s", 0.0)
         self._cache[key] = value
         return value
 
@@ -164,12 +179,26 @@ class Session:
                                   seed=int(seed))
         fn, kw = EVALUATORS.resolve(spec.evaluator)
         t0 = time.perf_counter()
+        pre = {k: self.stats[k] for k in ("build_wall_s", "build_device_s",
+                                          "stack_build", "stack_hit")}
         cell = self.resolve(spec)
         metrics, meta = fn(self, cell, **kw)
         wall = time.perf_counter() - t0
+        # One consistent snapshot AFTER the evaluator: builds an evaluator
+        # triggers itself (e.g. a fabric cell building via the session)
+        # count as build time for this cell, not as simulate time.
+        build_s = self.stats["build_wall_s"] - pre["build_wall_s"]
         meta = {"n_routers": cell.topo.n_routers,
                 "n_endpoints": cell.topo.n_endpoints,
                 "n_flows": int(cell.workload.n_flows),
+                # build-vs-simulate split for this cell's artifacts
+                "build_s": build_s,
+                "build_device_s": (self.stats["build_device_s"]
+                                   - pre["build_device_s"]),
+                "cache_builds": int(self.stats["stack_build"]
+                                    - pre["stack_build"]),
+                "cache_hits": int(self.stats["stack_hit"]
+                                  - pre["stack_hit"]),
                 **table_meta(cell.bundle), **meta}
         return RunResult(
             topo=spec.topo.format(), routing=spec.routing.format(),

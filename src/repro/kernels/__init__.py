@@ -1,6 +1,10 @@
 """Pallas TPU kernels for the paper's compute hot spots + substrate.
 
-* ``pathcount``       — saturating f32 path-count matmul (Appendix B.1).
+* ``semiring``        — batched semiring matmul engine (Appendix B.1):
+                        bool OR/AND, saturating f32 counting, (min, +).
+                        The whole path/layer pipeline routes through it.
+* ``pathcount``       — historical entry point, now the ``"count"``
+                        instance of the semiring engine.
 * ``gfmm``            — GF(p) modular matmul, Cheung connectivity (App. B.3).
 * ``flash_attention`` — online-softmax attention (GQA/window/softcap), the
                         LM substrate's dominant kernel.
@@ -13,3 +17,4 @@ from . import ops, ref  # noqa: F401
 from .flash_attention import flash_attention  # noqa: F401
 from .gfmm import gf_matmul  # noqa: F401
 from .pathcount import pathcount_matmul  # noqa: F401
+from .semiring import semiring_matmul  # noqa: F401

@@ -11,59 +11,30 @@ Tiling: (bm, bk) x (bk, bn) MXU tiles, K innermost grid dimension with the
 output block revisited and accumulated in place (standard Pallas reduction
 pattern); saturation is applied per K-step, which is semantics-preserving
 because SAT + x -> inf -> min(...) == SAT (monotone absorbing).
+
+The kernel body now lives in :mod:`repro.kernels.semiring` (the
+``"count"`` semiring); this module keeps the historical entry point.
 """
 
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
 __all__ = ["pathcount_matmul", "SAT"]
 
 SAT = 3.0e38
 
 
-def _pathcount_kernel(a_ref, b_ref, o_ref, *, sat: float):
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    prod = jax.lax.dot_general(
-        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    o_ref[...] = jnp.minimum(o_ref[...] + prod, sat)
-
-
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "sat", "interpret"))
 def pathcount_matmul(a: jnp.ndarray, b: jnp.ndarray, *, bm: int = 128,
                      bn: int = 128, bk: int = 128, sat: float = SAT,
                      interpret: bool = True) -> jnp.ndarray:
     """min(A @ B, sat) with (bm, bn, bk) VMEM tiling.
 
-    Inputs are zero-padded to tile multiples; the pad region contributes
-    zeros to the accumulation (exact).
+    Now a thin wrapper over the ``"count"`` instance of
+    :func:`repro.kernels.semiring.semiring_matmul` — the generalised
+    engine this kernel grew into; new code should call that directly.
     """
-    m, k = a.shape
-    k2, n = b.shape
-    assert k == k2, (a.shape, b.shape)
-    mp = -(-m // bm) * bm
-    np_ = -(-n // bn) * bn
-    kp = -(-k // bk) * bk
-    a_p = jnp.zeros((mp, kp), jnp.float32).at[:m, :k].set(a.astype(jnp.float32))
-    b_p = jnp.zeros((kp, np_), jnp.float32).at[:k, :n].set(b.astype(jnp.float32))
+    from .semiring import semiring_matmul
 
-    out = pl.pallas_call(
-        functools.partial(_pathcount_kernel, sat=sat),
-        grid=(mp // bm, np_ // bn, kp // bk),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
-        interpret=interpret,
-    )(a_p, b_p)
-    return out[:m, :n]
+    return semiring_matmul(a, b, "count", sat=sat, bm=bm, bn=bn, bk=bk,
+                           backend="pallas", interpret=interpret)

@@ -1,18 +1,62 @@
-"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests).
+
+These are also the CPU fast path: on non-TPU backends the semiring
+engine dispatches here, where XLA's native (batched) matmul beats an
+interpreted Pallas kernel by orders of magnitude.
+"""
 
 from __future__ import annotations
 
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 
-__all__ = ["pathcount_ref", "gf_matmul_ref", "attention_ref"]
+__all__ = ["pathcount_ref", "gf_matmul_ref", "attention_ref",
+           "semiring_matmul_ref"]
 
 
 def pathcount_ref(a: jnp.ndarray, b: jnp.ndarray, sat: float = 3.0e38) -> jnp.ndarray:
     """min(A @ B, sat) in f32 (exact below 2**24)."""
     return jnp.minimum(
         a.astype(jnp.float32) @ b.astype(jnp.float32), jnp.float32(sat))
+
+
+def _minplus_2d(a: jnp.ndarray, b: jnp.ndarray, chunk: int = 64) -> jnp.ndarray:
+    """(min, +) product, row-chunked so the (m, k, n) broadcast never
+    materialises whole (mirrors the kernel's tiling)."""
+    m, k = a.shape
+    mp = -(-m // chunk) * chunk
+    a_p = jnp.full((mp, k), jnp.inf, jnp.float32).at[:m].set(
+        a.astype(jnp.float32))
+    rows = a_p.reshape(mp // chunk, chunk, k)
+    out = jax.lax.map(
+        lambda r: (r[:, :, None] + b.astype(jnp.float32)[None, :, :]).min(axis=1),
+        rows)
+    return out.reshape(mp, b.shape[1])[:m]
+
+
+def semiring_matmul_ref(a: jnp.ndarray, b: jnp.ndarray,
+                        semiring: str = "count",
+                        sat: float = 3.0e38) -> jnp.ndarray:
+    """Oracle semantics for :func:`repro.kernels.semiring.semiring_matmul`;
+    operands may carry one leading batch dimension."""
+    if a.ndim == 3 or b.ndim == 3:
+        if a.ndim == 2:
+            a = jnp.broadcast_to(a[None], (b.shape[0],) + a.shape)
+        if b.ndim == 2:
+            b = jnp.broadcast_to(b[None], (a.shape[0],) + b.shape)
+    if semiring == "count":
+        prod = jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+        return jnp.minimum(prod, jnp.float32(sat))
+    if semiring == "bool":
+        prod = jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+        return prod > 0
+    if semiring == "minplus":
+        if a.ndim == 3:
+            return jax.vmap(_minplus_2d)(a, b)
+        return _minplus_2d(a, b)
+    raise ValueError(f"unknown semiring {semiring!r}")
 
 
 def gf_matmul_ref(a: jnp.ndarray, b: jnp.ndarray, p: int) -> jnp.ndarray:

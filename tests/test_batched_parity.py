@@ -1,0 +1,300 @@
+"""Parity: batched on-device path engine vs the historical per-layer
+numpy path (which lives on here as the reference implementation).
+
+Covers batched APSP, forwarding-table construction (validity +
+tie-break distribution + fixed-key determinism), the counting-semiring
+edge-usage fixpoint, (min, +) weighted distances, min_path_stats, the
+batched table walk, and build_layers invariants across all six schemes.
+"""
+
+import networkx as nx
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import layers as L
+from repro.core import paths as P
+from repro.core import transport as TP
+from repro.core.topology import slim_fly
+
+SCHEMES = ["rand", "undir", "pi_min", "spain", "past", "ksp"]
+
+
+def _random_stack(n, n_layers, p, seed, oriented=True):
+    rng = np.random.default_rng(seed)
+    base = np.triu(rng.random((n, n)) < p, 1)
+    base = base | base.T
+    stack = [base]
+    for _ in range(n_layers - 1):
+        keep = np.triu(base, 1) & (rng.random((n, n)) < 0.7)
+        la = np.zeros((n, n), dtype=bool)
+        if oriented:
+            pi = rng.permutation(n)
+            iu, ju = np.nonzero(keep)
+            fwd = pi[iu] < pi[ju]
+            la[np.where(fwd, iu, ju), np.where(fwd, ju, iu)] = True
+        else:
+            la = keep | keep.T
+        stack.append(la)
+    return np.stack(stack)
+
+
+# ---------------------------------------------------------------------------
+# Reference implementations: the pre-batching host-side numpy path.
+# ---------------------------------------------------------------------------
+def _ref_edge_usage(nh, reach, max_hops):
+    n = nh.shape[0]
+    s_idx, t_idx = np.nonzero(reach & ~np.eye(n, dtype=bool))
+    usage = np.zeros((n, n), dtype=np.int64)
+    cur = s_idx.astype(np.int64).copy()
+    tgt = t_idx.astype(np.int64)
+    for _ in range(max_hops):
+        active = cur != tgt
+        if not active.any():
+            break
+        nxt = nh[cur[active], tgt[active]].astype(np.int64)
+        good = nxt >= 0
+        np.add.at(usage, (cur[active][good], nxt[good]), 1)
+        new_cur = cur.copy()
+        upd = np.where(good, nxt, tgt[active])
+        new_cur[np.nonzero(active)[0]] = upd
+        cur = new_cur
+    return usage
+
+
+def _ref_minplus_apsp(w, max_len):
+    dist = w.copy()
+    for _ in range(max_len):
+        new = dist.copy()
+        for s0 in range(0, w.shape[0], 128):
+            s1 = min(w.shape[0], s0 + 128)
+            new[s0:s1] = np.minimum(
+                new[s0:s1], (dist[s0:s1, :, None] + w[None, :, :]).min(axis=1))
+        if np.allclose(new, dist):
+            break
+        dist = new
+    return dist
+
+
+# ---------------------------------------------------------------------------
+# APSP.
+# ---------------------------------------------------------------------------
+def test_apsp_batched_matches_per_layer():
+    stack = _random_stack(24, 5, 0.2, seed=0)
+    batched = np.asarray(P.apsp_batched(jnp.asarray(stack), max_l=24))
+    for i, la in enumerate(stack):
+        single = np.asarray(P.shortest_path_lengths(jnp.asarray(la), max_l=24))
+        np.testing.assert_array_equal(batched[i], single)
+
+
+def test_apsp_batched_matches_networkx():
+    stack = _random_stack(18, 1, 0.25, seed=1)
+    dist = np.asarray(P.apsp_batched(jnp.asarray(stack), max_l=18))[0]
+    g = nx.from_numpy_array(stack[0])
+    nxd = dict(nx.all_pairs_shortest_path_length(g))
+    for s in range(18):
+        for t in range(18):
+            expect = nxd.get(s, {}).get(t)
+            if expect is None:
+                assert dist[s, t] > 18
+            else:
+                assert dist[s, t] == expect
+
+
+# ---------------------------------------------------------------------------
+# Forwarding tables: validity, determinism, tie-break distribution.
+# ---------------------------------------------------------------------------
+def test_forwarding_batched_entries_valid():
+    stack = _random_stack(24, 4, 0.25, seed=2)
+    dist = P.apsp_batched(jnp.asarray(stack), max_l=24)
+    nh = np.asarray(P.forwarding_batched(stack, dist, jax.random.PRNGKey(0)))
+    dist = np.asarray(dist)
+    for i in range(stack.shape[0]):
+        for s in range(24):
+            for t in range(24):
+                v = nh[i, s, t]
+                if s == t:
+                    assert v == s
+                elif dist[i, s, t] <= 24:
+                    assert v >= 0 and stack[i, s, v]
+                    assert dist[i, v, t] == dist[i, s, t] - 1
+                else:
+                    # no candidate one hop closer -> -1
+                    cands = stack[i, s] & (dist[i, :, t] == dist[i, s, t] - 1)
+                    if not cands.any():
+                        assert v == -1
+
+
+def test_forwarding_batched_deterministic_per_key():
+    stack = _random_stack(20, 3, 0.3, seed=3)
+    dist = P.apsp_batched(jnp.asarray(stack), max_l=20)
+    a = np.asarray(P.forwarding_batched(stack, dist, jax.random.PRNGKey(7)))
+    b = np.asarray(P.forwarding_batched(stack, dist, jax.random.PRNGKey(7)))
+    c = np.asarray(P.forwarding_batched(stack, dist, jax.random.PRNGKey(8)))
+    np.testing.assert_array_equal(a, b)
+    assert (a != c).any(), "different keys must re-roll some tie-break"
+
+
+def test_forwarding_tie_break_uniform():
+    """On C4 (the 4-cycle) each opposite-corner pair has exactly two
+    equal-cost next hops; across keys both must appear with ~equal
+    frequency (the batched builder picks uniformly among candidates,
+    distribution-identical to the historical rng scoring)."""
+    adj = np.zeros((4, 4), dtype=bool)
+    for u, v in [(0, 1), (1, 2), (2, 3), (3, 0)]:
+        adj[u, v] = adj[v, u] = True
+    dist = P.apsp_batched(jnp.asarray(adj[None]), max_l=4)
+    picks = []
+    for k in range(200):
+        nh = np.asarray(P.forwarding_batched(adj[None], dist,
+                                             jax.random.PRNGKey(k)))
+        picks.append(nh[0, 0, 2])          # 0 -> 2 via 1 or via 3
+    picks = np.array(picks)
+    assert set(picks.tolist()) == {1, 3}
+    frac = (picks == 1).mean()
+    assert 0.35 < frac < 0.65, frac
+
+
+# ---------------------------------------------------------------------------
+# Edge usage (pi_min's bias signal): counting fixpoint == table walk.
+# ---------------------------------------------------------------------------
+def test_edge_usage_matches_walk_reference():
+    stack = _random_stack(22, 3, 0.25, seed=4)
+    max_l = 10
+    dist = P.apsp_batched(jnp.asarray(stack), max_l=max_l)
+    nh = P.forwarding_batched(stack, dist, jax.random.PRNGKey(1))
+    reach = np.asarray(dist) <= max_l
+    usage = np.asarray(P.edge_usage_batched(nh, jnp.asarray(reach), max_l))
+    nh = np.asarray(nh)
+    for i in range(stack.shape[0]):
+        expect = _ref_edge_usage(nh[i], reach[i], max_l)
+        np.testing.assert_array_equal(usage[i].astype(np.int64), expect)
+
+
+# ---------------------------------------------------------------------------
+# (min, +) weighted distances (ksp's substrate).
+# ---------------------------------------------------------------------------
+def test_minplus_apsp_matches_bellman_ford():
+    rng = np.random.default_rng(5)
+    stack = _random_stack(26, 1, 0.2, seed=5)
+    ws = []
+    for _ in range(3):
+        w = np.where(stack[0], 1.0 + 0.25 * rng.random((26, 26)), np.inf)
+        w = np.minimum(w, w.T)
+        np.fill_diagonal(w, 0.0)
+        ws.append(w)
+    ws = np.stack(ws)
+    out = np.asarray(P.minplus_apsp_batched(jnp.asarray(ws), max_l=12))
+    for i in range(3):
+        np.testing.assert_allclose(out[i], _ref_minplus_apsp(ws[i], 12),
+                                   rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# min_path_stats: device-side masked select.
+# ---------------------------------------------------------------------------
+def test_min_path_stats_matches_matrix_power():
+    stack = _random_stack(16, 1, 0.3, seed=6)
+    adj = stack[0]
+    dist, counts = P.min_path_stats(adj, max_l=8)
+    a = adj.astype(np.float64)
+    cur = a.copy()
+    for l in range(1, 9):
+        mask = dist == l
+        np.testing.assert_allclose(counts[mask], cur[mask])
+        cur = cur @ a
+    assert (counts[dist > 8] == 0).all()
+    assert (counts[np.eye(16, dtype=bool)] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Batched walks.
+# ---------------------------------------------------------------------------
+def test_walk_paths_layers_matches_single_walks():
+    stack = _random_stack(20, 3, 0.3, seed=7)
+    max_l = 10
+    dist = P.apsp_batched(jnp.asarray(stack), max_l=max_l)
+    nh = np.asarray(P.forwarding_batched(stack, dist, jax.random.PRNGKey(2)))
+    rng = np.random.default_rng(0)
+    li = rng.integers(3, size=40).astype(np.int32)
+    s = rng.integers(20, size=40).astype(np.int32)
+    t = (s + 1 + rng.integers(19, size=40)).astype(np.int32) % 20
+    batched = P.walk_paths_layers(nh, li, s, t, max_hops=12)
+    for j in range(40):
+        single = P.walk_paths(nh[li[j]], s[j:j + 1], t[j:j + 1], max_hops=12)
+        np.testing.assert_array_equal(batched[j], single[0])
+
+
+# ---------------------------------------------------------------------------
+# build_layers invariants, every scheme.
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def sf5():
+    return slim_fly(5)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_build_layers_tables_consistent(sf5, scheme):
+    """For every scheme: pathlen/reach agree with a per-layer APSP
+    recomputation, and every reachable table entry steps one hop closer
+    (ksp excepted: its tables follow weighted, near-minimal paths and are
+    covered by the loop-free walk instead)."""
+    lr = L.build_layers(sf5, n_layers=3, rho=0.6, scheme=scheme, seed=2)
+    max_len = max(6, sf5.diameter_nominal + 4)
+    for i in range(lr.n_layers):
+        if scheme == "ksp":
+            base = np.asarray(sf5.adj, dtype=bool)
+            dist = np.asarray(P.shortest_path_lengths(jnp.asarray(base),
+                                                      max_l=max_len))
+        else:
+            dist = np.asarray(P.shortest_path_lengths(
+                jnp.asarray(lr.layer_adj[i]), max_l=max_len))
+        reach = dist <= max_len
+        np.testing.assert_array_equal(lr.reach[i], reach)
+        np.testing.assert_array_equal(
+            lr.pathlen[i], np.where(reach, dist, 10_000).astype(np.int16))
+        if scheme != "ksp":
+            s, t = np.nonzero(reach & (dist > 0))
+            v = lr.nh[i, s, t]
+            assert (v >= 0).all()
+            assert lr.layer_adj[i][s, v].all()
+            np.testing.assert_array_equal(dist[v, t], dist[s, t] - 1)
+    lr.validate_loop_free(n_samples=150, seed=3)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_build_layers_deterministic(sf5, scheme):
+    a = L.build_layers(sf5, n_layers=3, rho=0.6, scheme=scheme, seed=4)
+    b = L.build_layers(sf5, n_layers=3, rho=0.6, scheme=scheme, seed=4)
+    np.testing.assert_array_equal(a.nh, b.nh)
+    np.testing.assert_array_equal(a.layer_adj, b.layer_adj)
+
+
+def test_build_layers_reports_build_stats(sf5):
+    lr = L.build_layers(sf5, n_layers=3, rho=0.6, seed=0)
+    assert lr.build_stats is not None
+    assert lr.build_stats["total_s"] > 0
+    assert lr.build_stats["device_s"] > 0
+
+
+def test_ecmp_routing_batched_tables_valid():
+    # fat tree: lots of equal-cost minimal paths, so differently
+    # tie-broken tables must actually differ (SF would not do: its pairs
+    # have a UNIQUE minimal path — the paper's Fig 6 point).
+    from repro.core.topology import fat_tree
+
+    topo = fat_tree(4)
+    ecmp = TP.ecmp_routing(topo, n_tables=4, seed=0)
+    adj = np.asarray(topo.adj, dtype=bool)
+    max_len = max(6, topo.diameter_nominal + 2)
+    dist = np.asarray(P.shortest_path_lengths(jnp.asarray(adj),
+                                              max_l=max_len))
+    for i in range(4):
+        s, t = np.nonzero((dist > 0) & (dist <= max_len))
+        v = ecmp.nh[i, s, t]
+        assert (v >= 0).all()
+        assert adj[s, v].all()
+        np.testing.assert_array_equal(dist[v, t], dist[s, t] - 1)
+    # differently tie-broken tables must actually differ
+    assert any((ecmp.nh[0] != ecmp.nh[i]).any() for i in range(1, 4))

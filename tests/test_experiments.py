@@ -228,3 +228,26 @@ def test_experiment_spec_make():
     e = ExperimentSpec.make("sf(q=5)", "ecmp", "uniform", seed=4)
     assert e.topo == Spec.parse("sf(q=5)") and e.seed == 4
     assert "sf(q=5)/ecmp/uniform/transport@s4" == e.cell_id
+
+
+# ---- build-time accounting (batched semiring builds) ------------------------
+def test_run_result_reports_build_split():
+    """RunResult.meta exposes the build-vs-simulate split and the cache
+    hit/miss counters; Session.stats accumulates the wall-time totals."""
+    s = Session()
+    rr = s.run("sf", "fatpaths(n_layers=3)", "uniform", QUICK_EV)
+    assert rr.meta["cache_builds"] >= 1
+    assert rr.meta["cache_hits"] == 0
+    assert rr.meta["build_s"] > 0
+    assert rr.meta["build_device_s"] >= 0
+    # second identical cell: everything cached, no new build time
+    rr2 = s.run("sf", "fatpaths(n_layers=3)", "uniform", QUICK_EV)
+    assert rr2.meta["cache_builds"] == 0
+    assert rr2.meta["cache_hits"] >= 1
+    assert rr2.meta["build_s"] == 0.0
+    assert s.stats["build_wall_s"] > 0
+    assert s.stats["build_device_s"] > 0
+    # the split round-trips through the canonical JSON record
+    back = RunResult.from_json(rr.to_json())
+    assert back.meta["build_s"] == rr.meta["build_s"]
+    assert back.meta["cache_builds"] == rr.meta["cache_builds"]
