@@ -1,0 +1,59 @@
+"""Distributed sweep engine vs the sequential grid runner.
+
+Times the same topology x scheme x pattern grid through both execution
+engines (artifact builds are excluded: both engines run against a
+pre-warmed Session, so the rows measure pure simulate/dispatch cost):
+
+  * ``sweep/seq/grid``   — the sequential per-cell loop (one scan
+                           dispatch + jit-cache entry per cell);
+  * ``sweep/dist/grid``  — the bucketed/padded/vmapped batch engine
+                           (CI-GUARDED: one compiled program per shape
+                           bucket).
+
+``speedup`` in the derived column is seq/dist on this machine.  Both
+rows run SINGLE-device (this process has no forced host devices, and
+the guarded timing must stay comparable to the committed baseline,
+which was measured single-device): the guarded key covers the engine's
+bucketing/padding/vmapped dispatch, where its single-device win
+(batching — a few compiled programs instead of one per cell) lives.
+The multi-device shard_map / round-robin scheduling paths are
+correctness-covered by tests and the CI dist-smoke identity check, and
+their wall time is visible in the nightly workflow's sweep logs — they
+are NOT part of this guarded number.
+"""
+
+from __future__ import annotations
+
+from .common import emit, get_session, timeit
+
+GRID = dict(topos=["sf(q=5)", "df(p=3)", "ft(k=8)"],
+            routings=["ecmp", "letflow", "fatpaths"],
+            patterns=["adversarial", "shuffle"])
+
+
+def main(quick: bool = False) -> None:
+    from repro.experiments.dist_sweep import dist_sweep
+
+    session = get_session()
+    ev = [f"transport(steps={200 if quick else 400})"]
+    cells = session.grid(evaluators=ev, **GRID)
+    n = len(cells)
+
+    # Warm every artifact (and both engines' jit caches) once, so the
+    # timed samples compare engine dispatch, not layer-stack builds.
+    session.sweep(evaluators=ev, **GRID)
+    dist_sweep(session, cells, devices=None)
+
+    seq = timeit(lambda: session.sweep(evaluators=ev, **GRID),
+                 n=3, warmup=0)
+    dist = timeit(lambda: dist_sweep(session, cells, devices=None),
+                  n=3, warmup=0)
+    speedup = seq.median_us / max(dist.median_us, 1.0)
+    emit("sweep/seq/grid", seq, f"cells={n}")
+    emit("sweep/dist/grid", dist,
+         f"cells={n} speedup={speedup:.2f} us_per_cell="
+         f"{dist.median_us / n:.0f}")
+
+
+if __name__ == "__main__":
+    main()

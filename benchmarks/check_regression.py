@@ -1,39 +1,64 @@
 """CI perf gate: fail when guarded benchmark timings regress.
 
   PYTHONPATH=src python -m benchmarks.check_regression NEW.json \\
-      [--baseline BENCH_PR3.json] [--threshold 1.25]
+      [--baseline BENCH_PR4.json] [--threshold 1.25]
 
-Compares ``us_per_call`` for the guarded key patterns below against the
-committed baseline (``BENCH_PR3.json``, produced by
-``python -m benchmarks.run --quick --json``).  A guarded key regresses
-when it is more than ``threshold`` times slower than the baseline after
-machine calibration; a guarded key MISSING from the new run also fails
-(renaming a guarded benchmark must not silently disable its gate).
+Compares timings for the guarded key patterns below against the
+committed baseline (``BENCH_PR4.json``, produced by
+``python -m benchmarks.run --quick --json``) — min-over-samples where a
+row records one, else the median headline (see ``_us``).  The fail
+decision is two-level: a guarded GROUP (one per pattern below) fails
+when the geometric mean of its calibrated ratios exceeds ``threshold``;
+a single row fails above ``threshold**2`` (see :func:`compare` for the
+noise rationale).  A guarded key MISSING from either side also fails
+(renaming a guarded benchmark must not silently disable its gate, and a
+stale baseline must not pass it).
+
+The FULL baseline-vs-current table (every key present on either side,
+guarded rows flagged) is printed on success as well as failure, so the
+nightly job's uploaded log is inspectable without re-running anything.
 
 Because the committed baseline and the CI runner are different
 machines, raw microseconds are not comparable; both runs are normalised
 by a calibration key (default: the ``kernels/pathcount`` row — a plain
 jitted XLA matmul whose speed tracks the machine, not this repo's hot
-paths).  Regenerate the baseline with
-``python -m benchmarks.run --quick --json BENCH_PR3.json`` whenever a
-guarded benchmark's workload deliberately changes.
+paths).  Recalibrating the baseline when hardware or a guarded
+workload deliberately changes:
+``python -m benchmarks.run --quick --json BENCH_PR4.json`` (see
+README "refreshing the bench baseline").
 
 Guarded:
   * ``fig12/disjoint/…``        — bench_layers COLD layer-stack builds
                                   (the batched semiring build path);
   * ``transport/steptime/…``    — bench_transport per-step scan cost
-                                  (paths precomputed outside the scan).
+                                  (paths precomputed outside the scan);
+  * ``sweep/dist/…``            — bench_sweep distributed-engine wall
+                                  time for the whole quick grid (the
+                                  scale keystone's contract).
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import math
 import re
 import sys
 
-GUARDED = [r"^fig12/disjoint/", r"^transport/steptime/"]
+GUARDED = [r"^fig12/disjoint/", r"^transport/steptime/", r"^sweep/dist/"]
 CALIBRATE = r"^kernels/pathcount/"
+
+
+def _us(row: dict) -> float:
+    """The comparison time for one bench row: the min-over-samples when
+    the row carries one (``derived.min_us``, emitted by common.timeit),
+    else the headline median.  Minima are the right gate statistic on
+    shared/noisy runners: contention inflates samples but never deflates
+    them, so min-vs-min drifts far less run-to-run than median-vs-median
+    (observed 1.5x swings on guarded keys between idle runs of identical
+    code)."""
+    mn = row.get("derived", {}).get("min_us")
+    return float(mn) if mn else float(row["us_per_call"])
 
 
 def _calibration(baseline: dict, new: dict) -> float:
@@ -42,41 +67,87 @@ def _calibration(baseline: dict, new: dict) -> float:
     pat = re.compile(CALIBRATE)
     for name in sorted(baseline):
         if pat.search(name) and name in new:
-            b = float(baseline[name]["us_per_call"])
-            v = float(new[name]["us_per_call"])
+            b = _us(baseline[name])
+            v = _us(new[name])
             if b > 0 and v > 0:
                 return v / b
     return 1.0
 
 
 def compare(baseline: dict, new: dict, threshold: float):
-    """Returns (failures, rows, missing): guarded keys over threshold,
-    all guarded comparisons as (name, base_us, new_us, calibrated
-    ratio), and guarded keys absent from the new run."""
+    """Returns (failures, rows, missing, cal).
+
+    ``failures`` — human-readable regression descriptions, two-level:
+    each guarded GROUP (one entry per pattern in ``GUARDED``) fails when
+    the geometric mean of its calibrated ratios exceeds ``threshold``;
+    an individual row only fails above ``threshold**2`` (per-row noise
+    on small shared runners swings ~1.4x between idle runs of identical
+    code; the group geomean drifts <1.1x, so the tight bound lives on
+    the group statistic and the loose one catches single-row blowups).
+
+    ``rows`` — ALL baseline-vs-new comparisons as (name, guarded,
+    base_us, new_us, calibrated ratio), the full table, not only the
+    guarded slice.  ``missing`` — guarded keys absent from EITHER side
+    as (name, side) pairs (new-side missing = renamed benchmark,
+    baseline-side missing = stale baseline — both must fail, not
+    silently pass).  ``cal`` — the machine calibration factor."""
     guard = re.compile("|".join(GUARDED))
     cal = _calibration(baseline, new)
     rows = []
     failures = []
     missing = []
-    for name, base in sorted(baseline.items()):
-        if not guard.search(name):
-            continue
+    groups = {pat: [] for pat in GUARDED}
+    for name in sorted(set(baseline) | set(new)):
+        guarded = bool(guard.search(name))
         if name not in new:
-            missing.append(name)
+            if guarded:
+                missing.append((name, "new run"))
+            rows.append((name, guarded, _us(baseline[name]), float("nan"),
+                         float("nan")))
             continue
-        b = float(base["us_per_call"])
-        v = float(new[name]["us_per_call"])
+        if name not in baseline:
+            if guarded:
+                missing.append((name, "baseline"))
+            rows.append((name, guarded, float("nan"), _us(new[name]),
+                         float("nan")))
+            continue
+        b = _us(baseline[name])
+        v = _us(new[name])
         ratio = v / (b * cal) if b > 0 else float("inf")
-        rows.append((name, b, v, ratio))
-        if ratio > threshold:
-            failures.append((name, b, v, ratio))
+        rows.append((name, guarded, b, v, ratio))
+        if guarded:
+            for pat in GUARDED:
+                if re.search(pat, name):
+                    groups[pat].append(ratio)
+        # Per-row bound at threshold^2: single-row timing noise on small
+        # shared runners routinely swings ~1.4x (measured between idle
+        # runs of identical code), so an individual row only fails on a
+        # blowup no noise produces.
+        if guarded and ratio > threshold * threshold:
+            failures.append(f"{name}: x{ratio:.2f} > per-row bound "
+                            f"x{threshold * threshold:.2f}")
+    # Group bound at threshold: the geometric mean over a guarded
+    # group's rows averages the per-row noise away (measured group
+    # drift < 1.1x where single rows drift 1.4x), so the tight
+    # threshold applies to the group statistic — but ONLY when the
+    # group is wide enough to average anything; a 1-2 key group's
+    # geomean IS (nearly) a single row, so it gets the per-row bound,
+    # not a false sense of averaging.
+    for pat, ratios in groups.items():
+        if not ratios:
+            continue
+        bound = threshold if len(ratios) >= 3 else threshold * threshold
+        gm = math.prod(ratios) ** (1.0 / len(ratios))
+        if gm > bound:
+            failures.append(f"group {pat!r}: geomean x{gm:.2f} over "
+                            f"{len(ratios)} key(s) > x{bound:.2f}")
     return failures, rows, missing, cal
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("new", help="bench --json output to check")
-    ap.add_argument("--baseline", default="BENCH_PR3.json")
+    ap.add_argument("--baseline", default="BENCH_PR4.json")
     ap.add_argument("--threshold", type=float, default=1.25)
     args = ap.parse_args(argv)
 
@@ -87,27 +158,36 @@ def main(argv=None) -> int:
 
     failures, rows, missing, cal = compare(baseline, new, args.threshold)
     print(f"machine calibration factor: x{cal:.2f} ({CALIBRATE!r} key)")
-    for name, b, v, ratio in rows:
-        flag = " <-- REGRESSION" if ratio > args.threshold else ""
-        print(f"{name:45s} base={b:10.1f}us new={v:10.1f}us "
-              f"x{ratio:.2f} (calibrated){flag}")
-    for name in missing:
-        print(f"ERROR: guarded key {name!r} missing from new run",
+    n_guarded = 0
+    row_bound = args.threshold * args.threshold
+    for name, guarded, b, v, ratio in rows:
+        n_guarded += guarded and ratio == ratio    # both-sided comparisons
+        mark = "[guard]" if guarded else "       "
+        flag = " <-- REGRESSION" if guarded and ratio > row_bound else ""
+        print(f"{mark} {name:45s} base={b:10.1f}us new={v:10.1f}us "
+              f"x{ratio:5.2f} (calibrated){flag}")
+    for name, side in missing:
+        print(f"ERROR: guarded key {name!r} missing from {side}",
               file=sys.stderr)
-    if not rows:
+    if not n_guarded and not missing:
         print("ERROR: no guarded keys matched — baseline stale?",
               file=sys.stderr)
         return 1
     if missing:
         print(f"{len(missing)} guarded benchmark(s) missing — a guarded "
-              "key rename must update BENCH_PR3.json", file=sys.stderr)
+              "key rename must update the committed baseline",
+              file=sys.stderr)
         return 1
     if failures:
-        print(f"{len(failures)} guarded benchmark(s) regressed "
-              f">{(args.threshold - 1) * 100:.0f}%", file=sys.stderr)
+        for f in failures:
+            print(f"REGRESSION: {f}", file=sys.stderr)
+        print(f"{len(failures)} guarded regression(s) (group geomean "
+              f">{(args.threshold - 1) * 100:.0f}% or single row "
+              f">{(row_bound - 1) * 100:.0f}%)", file=sys.stderr)
         return 1
-    print(f"perf gate OK ({len(rows)} guarded keys within "
-          f"{(args.threshold - 1) * 100:.0f}%)")
+    print(f"perf gate OK ({n_guarded} guarded keys in {len(GUARDED)} "
+          f"groups within {(args.threshold - 1) * 100:.0f}%; "
+          f"{len(rows)} keys compared)")
     return 0
 
 

@@ -1,1 +1,2 @@
 from .checkpoint import CheckpointManager, save_checkpoint, restore_checkpoint  # noqa: F401
+from .sweep import SweepCheckpoint  # noqa: F401

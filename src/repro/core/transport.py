@@ -44,7 +44,8 @@ from .topology import Topology
 from .traffic import FlowWorkload
 
 __all__ = ["SimConfig", "SimResult", "simulate", "simulate_seeds",
-           "ecmp_routing"]
+           "ecmp_routing", "prepare", "pad_prepared", "batch_result",
+           "shape_signature"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,14 +158,32 @@ def _path_edge_tensor(nh, eix, src_r, dst_r, max_hops):
     return jax.vmap(one_layer)(nh)
 
 
-def _prepare(topo: Topology, routing: LayeredRouting, wl: FlowWorkload,
-             cfg: SimConfig):
-    """Static arrays for the scan — including the per-layer path-edge
-    tensor, so the scan body never re-derives flow paths."""
+def _virtual_links(topo: Topology, wl: FlowWorkload):
+    """(edge-index matrix, fabric edge count, endpoint count) — the
+    virtual-link layout shared by :func:`_prepare` and the cheap
+    :func:`shape_signature` probe."""
     eix = topo.edge_index_matrix()              # (N, N) -> directed edge id
     n_edges = int((eix >= 0).sum())
     n_ep = wl.src.max() + 1 if len(wl.src) else 1
     n_ep = int(max(n_ep, wl.dst.max() + 1))
+    return eix, n_edges, n_ep
+
+
+def shape_signature(topo: Topology, routing: LayeredRouting,
+                    wl: FlowWorkload) -> Tuple[int, int, int]:
+    """(n_flows, e_tot, n_layers) for a cell WITHOUT building the scan
+    operands — what batch engines bucket on.  Matches the shapes
+    :func:`prepare` will realize (the hop depth is the one axis only
+    the path walk can determine)."""
+    _, n_edges, n_ep = _virtual_links(topo, wl)
+    return (len(wl.src), n_edges + 2 * n_ep + 1, int(routing.nh.shape[0]))
+
+
+def _prepare(topo: Topology, routing: LayeredRouting, wl: FlowWorkload,
+             cfg: SimConfig):
+    """Static arrays for the scan — including the per-layer path-edge
+    tensor, so the scan body never re-derives flow paths."""
+    eix, n_edges, n_ep = _virtual_links(topo, wl)
     # virtual links: [0, E) fabric, [E, E+n_ep) injection, [E+n_ep, ..) eject,
     # final slot = trash for -1 scatter.
     e_inj = n_edges
@@ -203,14 +222,31 @@ def _prepare(topo: Topology, routing: LayeredRouting, wl: FlowWorkload,
     )
 
 
-def _pick_layers(key, usable, minimal_only_mask):
-    """Uniform choice among usable layers per flow (layer 0 fallback)."""
+def _flow_uniforms(key, f):
+    """(F, 2) U[0,1) draws where row ``i`` depends ONLY on ``(key, i)``.
+
+    A plain ``jax.random.uniform(key, (f,))`` is NOT padding-safe:
+    threefry pairs the flat counter array across its two halves, so
+    growing ``f`` (batch padding) changes every flow's draw.  Deriving a
+    per-flow key via ``fold_in`` makes each row's bits a function of the
+    flow index alone — a cell simulated standalone and the same cell
+    padded into a larger batch consume identical randomness, which is
+    what lets the distributed sweep engine promise bit-identical
+    per-cell results (see repro.experiments.dist_sweep)."""
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(f))
+    return jax.vmap(lambda k: jax.random.uniform(k, (2,)))(keys)
+
+
+def _pick_layers(u, usable, minimal_only_mask):
+    """Uniform choice among usable layers per flow, driven by one
+    per-flow uniform ``u`` (layer 0 fallback): pick the r-th usable
+    layer with r ~ U{0..n_usable-1}."""
     usable = usable & minimal_only_mask[None, :]       # (F, L)
-    g = jax.random.gumbel(key, usable.shape)
-    g = jnp.where(usable, g, -jnp.inf)
-    pick = jnp.argmax(g, axis=1).astype(jnp.int32)
-    any_ok = usable.any(axis=1)
-    return jnp.where(any_ok, pick, 0)
+    c = jnp.cumsum(usable.astype(jnp.int32), axis=1)   # (F, L)
+    n = c[:, -1]
+    r = jnp.minimum((u * n).astype(jnp.int32), jnp.maximum(n - 1, 0))
+    pick = jnp.argmax(c > r[:, None], axis=1).astype(jnp.int32)
+    return jnp.where(n > 0, pick, 0)
 
 
 def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
@@ -223,7 +259,8 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
     reroute = cfg.balancing in ("letflow", "fatpaths")
 
     k_init, k_scan = jax.random.split(key0)
-    layer0 = _pick_layers(k_init, arrs["usable"], minimal_only)
+    layer0 = _pick_layers(_flow_uniforms(k_init, f)[:, 0], arrs["usable"],
+                          minimal_only)
 
     if cfg.transport == "ndp":
         rate0 = jnp.ones(f, dtype=jnp.float32)         # line rate start
@@ -237,14 +274,18 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
         fct=jnp.full(f, jnp.nan, dtype=jnp.float32),
         hops=jnp.zeros(f, dtype=jnp.float32),
         key=k_scan,
-        util_acc=jnp.float32(0.0),
+        # Per-flow accumulators (elementwise, exact under flow padding);
+        # the utilization ratio is taken on host AFTER stripping padding,
+        # so batched and standalone runs report bit-identical metrics.
+        sent_acc=jnp.zeros(f, dtype=jnp.float32),
+        w_acc=jnp.zeros(f, dtype=jnp.float32),
     )
 
     cap = jnp.ones(e_tot, dtype=jnp.float32)           # capacities in line units
 
     def step(state, i):
         t = i.astype(jnp.float32) * cfg.dt
-        key, k_gap, k_pick = jax.random.split(state["key"], 3)
+        key, k_step = jax.random.split(state["key"])
         started = arrs["start"] <= t
         done = state["remaining"] <= 0
         active = started & ~done
@@ -305,15 +346,16 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
             slack = 1.0 - jnp.clip(sent, 0.0, 1.0)
             p_gap = jnp.clip(cfg.dt / cfg.flowlet_gap
                              * (slack + cfg.gap_eps), 0.0, 1.0)
-            roll = jax.random.uniform(k_gap, (f,)) < p_gap
-            newpick = _pick_layers(k_pick, arrs["usable"], minimal_only)
+            u = _flow_uniforms(k_step, f)                # padding-safe draws
+            roll = u[:, 0] < p_gap
+            newpick = _pick_layers(u[:, 1], arrs["usable"], minimal_only)
             layer = jnp.where(roll & active, newpick, state["layer"])
         else:
             layer = state["layer"]
 
-        util = sent.sum() / jnp.maximum(w.sum(), 1.0)
         out = dict(remaining=new_remaining, layer=layer, rate=rate, fct=fct,
-                   hops=hops, key=key, util_acc=state["util_acc"] + util)
+                   hops=hops, key=key, sent_acc=state["sent_acc"] + sent,
+                   w_acc=state["w_acc"] + w)
         return out, None
 
     final, _ = jax.lax.scan(step, init, jnp.arange(n_steps))
@@ -333,24 +375,105 @@ def _run_scan_batch(arrs, keys, cfg: SimConfig,
 
 def _to_result(size: np.ndarray, final, cfg: SimConfig) -> SimResult:
     remaining = np.asarray(final["remaining"])
+    # Flow-time-weighted achieved-rate fraction: total line-rate fraction
+    # actually sent over total demanded.  Host-side float64 over the
+    # (padding-stripped) per-flow accumulators — identical whether the
+    # cell ran standalone or inside a padded batch.
+    sent = float(np.asarray(final["sent_acc"], dtype=np.float64).sum())
+    want = float(np.asarray(final["w_acc"], dtype=np.float64).sum())
     return SimResult(
         fct=np.asarray(final["fct"]),
         delivered=size - remaining,
         size=size,
         finished=remaining <= 0,
-        link_util_mean=float(final["util_acc"]) / cfg.n_steps,
+        link_util_mean=sent / max(want, 1.0),
         config=cfg,
     )
+
+
+def prepare(topo: Topology, routing: LayeredRouting, wl: FlowWorkload,
+            cfg: SimConfig):
+    """Public prepare step for external batch engines: returns
+    ``(arrs, static)`` where ``arrs`` is the dict of scan operands and
+    ``static = (e_tot, n_layers, n_steps)`` the static shape triple
+    consumed by the scan program.  ``repro.experiments.dist_sweep`` pads
+    and stacks many cells' ``arrs`` into one vmapped program."""
+    arrs = _prepare(topo, routing, wl, cfg)
+    static = (int(arrs["e_tot"]), int(arrs["n_layers"]), int(cfg.n_steps))
+    jarrs = {k: v for k, v in arrs.items() if k not in ("e_tot", "n_layers")}
+    return jarrs, static
+
+
+def pad_prepared(arrs, static, *, n_flows: int, n_edges: int,
+                 hop_slots: int):
+    """Pad one cell's prepared scan operands to a bucket-wide shape so
+    heterogeneous cells stack into one batched program, WITHOUT changing
+    the simulation of the real flows.
+
+    Exactness argument (each padding axis):
+
+    * flows (F): padded flows have ``start=inf`` (never started), size 0,
+      ``usable``/``routed`` False — their water-filling weight is 0.0, an
+      exact no-op on every shared-link sum, and the per-flow randomness
+      is ``fold_in``-keyed by flow index so real flows' draws are
+      unchanged (:func:`_flow_uniforms`);
+    * hop slots (H): pad columns are -1, which the scan maps to the trash
+      link and excludes from every min/fair-share reduction;
+    * virtual links (e_tot): extra slots have capacity 1 and no flow ever
+      indexes them (edge ids are cell-local); only the trash slot moves,
+      and it is write-only.
+
+    The layer count L and step count are bucket keys, never padded —
+    padding L would change layer-choice draws, padding steps would change
+    the dynamics.
+    """
+    e_tot, n_layers, n_steps = static
+    F, H = arrs["size"].shape[0], arrs["path_edges"].shape[2]
+    if n_flows < F or n_edges < e_tot or hop_slots < H:
+        raise ValueError(f"pad target ({n_flows},{n_edges},{hop_slots}) "
+                         f"smaller than cell ({F},{e_tot},{H})")
+
+    def padf(x, fill, axis):
+        pads = [(0, 0)] * x.ndim
+        pads[axis] = (0, n_flows - x.shape[axis])
+        return jnp.pad(x, pads, constant_values=fill)
+
+    pe = jnp.pad(arrs["path_edges"], ((0, 0), (0, 0), (0, hop_slots - H)),
+                 constant_values=-1)
+    out = dict(
+        path_edges=padf(pe, -1, 1),
+        routed=padf(arrs["routed"], False, 1),
+        path_hops=padf(arrs["path_hops"], 0.0, 1),
+        usable=padf(arrs["usable"], False, 0),
+        size=padf(arrs["size"], 0.0, 0),
+        start=padf(arrs["start"], jnp.inf, 0),
+    )
+    return out, (int(n_edges), n_layers, n_steps)
+
+
+def batch_result(size: np.ndarray, final, cfg: SimConfig,
+                 n_flows: Optional[int] = None) -> SimResult:
+    """One element of a batched scan output -> :class:`SimResult`,
+    stripping flow padding (``n_flows`` = the cell's real flow count)."""
+    per_flow = ("remaining", "layer", "rate", "fct", "hops",
+                "sent_acc", "w_acc")
+    if n_flows is not None:
+        final = {k: (v[:n_flows] if k in per_flow else v)
+                 for k, v in final.items()}
+        size = size[:n_flows]
+    return _to_result(np.asarray(size), final, cfg)
 
 
 def simulate(topo: Topology, routing: LayeredRouting, wl: FlowWorkload,
              cfg: SimConfig) -> SimResult:
     """Run the flow simulator; returns per-flow FCTs and aggregates."""
-    arrs = _prepare(topo, routing, wl, cfg)
-    static = (int(arrs["e_tot"]), int(arrs["n_layers"]), int(cfg.n_steps))
-    jarrs = {k: v for k, v in arrs.items() if k not in ("e_tot", "n_layers")}
-    final = _run_scan(jarrs, jax.random.PRNGKey(cfg.seed), cfg, static)
-    return _to_result(np.asarray(arrs["size"]), final, cfg)
+    jarrs, static = prepare(topo, routing, wl, cfg)
+    # The PRNG key is a scan operand; cfg.seed is NOT read inside the
+    # program, so normalize it out of the jit-static config — otherwise
+    # every sweep seed recompiles a byte-identical scan.
+    cfg0 = dataclasses.replace(cfg, seed=0)
+    final = _run_scan(jarrs, jax.random.PRNGKey(cfg.seed), cfg0, static)
+    return _to_result(np.asarray(jarrs["size"]), final, cfg)
 
 
 def simulate_seeds(topo: Topology, routing: LayeredRouting, wl: FlowWorkload,
@@ -362,12 +485,12 @@ def simulate_seeds(topo: Topology, routing: LayeredRouting, wl: FlowWorkload,
     seeds = [int(s) for s in seeds]
     if not seeds:
         return []
-    arrs = _prepare(topo, routing, wl, cfg)
-    static = (int(arrs["e_tot"]), int(arrs["n_layers"]), int(cfg.n_steps))
-    jarrs = {k: v for k, v in arrs.items() if k not in ("e_tot", "n_layers")}
+    jarrs, static = prepare(topo, routing, wl, cfg)
     keys = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
-    finals = _run_scan_batch(jarrs, keys, cfg, static)
-    size = np.asarray(arrs["size"])
+    # seed normalized out of the static config — see simulate().
+    finals = _run_scan_batch(jarrs, keys, dataclasses.replace(cfg, seed=0),
+                             static)
+    size = np.asarray(jarrs["size"])
     return [
         _to_result(size, {k: v[i] for k, v in finals.items()},
                    dataclasses.replace(cfg, seed=s))

@@ -31,11 +31,12 @@ from . import collectives, fabric, sharding  # noqa: E402,F401
 from .collectives import (layer_strides, multiring_all_reduce,  # noqa: E402,F401
                           ring_all_gather, ring_reduce_scatter)
 from .fabric import ClusterFabric, CollectiveReport, collective_flows  # noqa: E402,F401
-from .sharding import P, Runtime  # noqa: E402,F401
+from .sharding import P, Runtime, host_device_runtime  # noqa: E402,F401
 
 __all__ = [
     "P",
     "Runtime",
+    "host_device_runtime",
     "layer_strides",
     "multiring_all_reduce",
     "ring_reduce_scatter",

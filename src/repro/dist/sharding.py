@@ -36,10 +36,11 @@ from typing import Any, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-__all__ = ["P", "Runtime"]
+__all__ = ["P", "Runtime", "host_device_runtime"]
 
 # Logical entry names understood by spec()/spec_div()/shard().
 _FSDP = "fsdp"
@@ -200,3 +201,33 @@ class Runtime:
     def astype(self, x):
         """Cast to the collective wire dtype (``collective_dtype``)."""
         return x.astype(_DTYPES[self.collective_dtype])
+
+
+def host_device_runtime(devices: Optional[int] = None,
+                        axis: str = "data") -> Runtime:
+    """A :class:`Runtime` over a 1-D mesh of ``devices`` local devices —
+    the entry point for CPU-hosted data parallelism under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+
+    * ``devices`` ``None`` -> use every visible device;
+    * ``devices <= 1``     -> ``Runtime(mesh=None)`` (single-device
+      no-op degradation, same program, no shard_map);
+    * asking for more devices than jax can see raises with the exact
+      ``XLA_FLAGS`` incantation — the flag must be set *before* the
+      first jax import of the process, it cannot be retrofitted (the
+      experiments CLI sets it for you when run with ``--devices N``).
+    """
+    avail = jax.device_count()
+    n = avail if devices is None else int(devices)
+    if n <= 1:
+        return Runtime(mesh=None, data_axes=(axis,))
+    if n > avail:
+        raise RuntimeError(
+            f"asked for {n} devices but jax sees {avail}.  Forced host "
+            f"devices must be configured before jax initializes: set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            f"(and JAX_PLATFORMS=cpu) in the environment, or launch via "
+            f"`python -m repro.experiments sweep --devices {n}` which "
+            f"sets both before importing jax.")
+    mesh = Mesh(np.asarray(jax.devices()[:n]), (axis,))
+    return Runtime(mesh=mesh, data_axes=(axis,))

@@ -10,28 +10,73 @@ executed through a memoizing :class:`Session`:
                "transport(steps=1200)")
     print(rr.metrics["fct_p99_us"])
 
-Grids go through :meth:`Session.sweep` or the CLI::
+Grids go through :meth:`Session.sweep` (``devices=N`` engages the
+distributed batch engine, ``checkpoint_dir`` makes them resumable) or
+the CLI::
 
     python -m repro.experiments sweep --topos sf,df,ft \\
-        --schemes ecmp,letflow,fatpaths --patterns adversarial,shuffle
+        --schemes ecmp,letflow,fatpaths --patterns adversarial,shuffle \\
+        --devices 8 --checkpoint /tmp/sweep.ckpt
 
-* :mod:`repro.experiments.specs`    — mini-spec grammar + ExperimentSpec.
-* :mod:`repro.experiments.registry` — decorator registries.
-* :mod:`repro.experiments.catalog`  — the registered axes.
-* :mod:`repro.experiments.session`  — artifact memoization + grid runner.
-* :mod:`repro.experiments.results`  — canonical RunResult JSON records.
+* :mod:`repro.experiments.specs`      — mini-spec grammar + ExperimentSpec.
+* :mod:`repro.experiments.registry`   — decorator registries.
+* :mod:`repro.experiments.catalog`    — the registered axes.
+* :mod:`repro.experiments.session`    — artifact memoization + grid runner.
+* :mod:`repro.experiments.dist_sweep` — bucketed/padded/sharded batch engine.
+* :mod:`repro.experiments.results`    — canonical RunResult JSON records.
+
+Exports resolve lazily (PEP 562): ``python -m repro.experiments`` must
+be able to parse ``--devices N`` and set
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` BEFORE anything
+imports jax — an eager ``from .catalog import ...`` here would
+initialize the jax backend with the wrong device count.
 """
 
-from .catalog import (EVALUATORS, ROUTINGS, TOPOLOGIES, TRAFFIC,  # noqa: F401
-                      RoutingBundle, topo_spec)
-from .results import (RunResult, results_from_json,  # noqa: F401
-                      results_to_json, summary_table)
-from .session import ResolvedCell, Session  # noqa: F401
-from .specs import ExperimentSpec, Spec, SpecError, split_spec_list  # noqa: F401
+import importlib
 
-__all__ = [
-    "Session", "ResolvedCell", "ExperimentSpec", "Spec", "SpecError",
-    "RunResult", "RoutingBundle", "results_to_json", "results_from_json",
-    "summary_table", "split_spec_list", "topo_spec",
-    "TOPOLOGIES", "ROUTINGS", "TRAFFIC", "EVALUATORS",
-]
+_EXPORTS = {
+    # specs (jax-free)
+    "ExperimentSpec": ".specs", "Spec": ".specs", "SpecError": ".specs",
+    "split_spec_list": ".specs",
+    # results (jax-free)
+    "RunResult": ".results", "results_to_json": ".results",
+    "results_from_json": ".results", "summary_table": ".results",
+    "order_results": ".results", "compare_results": ".results",
+    "EXECUTION_META_KEYS": ".results",
+    # catalog / session / engine (import jax)
+    "EVALUATORS": ".catalog", "ROUTINGS": ".catalog",
+    "TOPOLOGIES": ".catalog", "TRAFFIC": ".catalog",
+    "RoutingBundle": ".catalog", "topo_spec": ".catalog",
+    "Session": ".session", "ResolvedCell": ".session",
+}
+
+# NOT in _EXPORTS: the dist_sweep FUNCTION.  `repro.experiments.
+# dist_sweep` must always name the submodule — exporting the function
+# under the same name would make the attribute depend on import order
+# (any `import repro.experiments.dist_sweep` rebinds the parent
+# package attribute to the module).  Call it as
+# `repro.experiments.dist_sweep.dist_sweep(...)` or import it from the
+# submodule explicitly.
+_SUBMODULES = frozenset({"specs", "registry", "catalog", "session",
+                         "results", "dist_sweep"})
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    if name in _SUBMODULES:
+        return importlib.import_module("." + name, __name__)
+    # Resolve the export table BEFORE importing, so an exception raised
+    # while the submodule executes propagates as itself instead of being
+    # masked as an AttributeError on the package.
+    target = _EXPORTS.get(name)
+    if target is None:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}")
+    value = getattr(importlib.import_module(target, __name__), name)
+    globals()[name] = value          # cache: next access skips __getattr__
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -2,34 +2,66 @@
 
   python -m repro.experiments sweep --topos sf,df,ft \\
       --schemes ecmp,letflow,fatpaths --patterns adversarial,shuffle \\
-      [--evaluators transport] [--seeds 0] [--quick] [--json out.json]
+      [--evaluators transport] [--seeds 0] [--quick] [--json out.json] \\
+      [--devices N] [--checkpoint DIR]
 
   python -m repro.experiments run --topo "sf(q=5)" --scheme fatpaths \\
       --pattern adversarial [--evaluator "transport(steps=1200)"]
 
+  python -m repro.experiments diff a.json b.json [--rtol 0]   # artifacts
   python -m repro.experiments list          # registered axes + defaults
 
 ``--quick`` shortens transport simulations (steps=400) unless a spec
-pins ``steps`` explicitly.  One sweep invocation over the defaults
-reproduces the paper's Fig 14/15-style topology x scheme x pattern
-comparison grid in a single command.
+pins ``steps`` explicitly.  ``--devices N`` runs the grid through the
+distributed batch engine (repro.experiments.dist_sweep): when no device
+configuration exists yet, the CLI sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (and pins
+``JAX_PLATFORMS=cpu``) BEFORE importing jax, so forced host devices
+just work; per-cell results are identical for every device count.
+``--checkpoint DIR`` makes a sweep resumable: completed cells are
+committed per-cell and a re-run skips them.  One sweep invocation over
+the defaults reproduces the paper's Fig 14/15-style topology x scheme x
+pattern comparison grid in a single command.
+
+Heavy imports happen inside the command handlers — argument parsing and
+device-environment setup must run before anything touches jax.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 
-from .catalog import EVALUATORS, ROUTINGS, TOPOLOGIES, TRAFFIC
-from .results import results_to_json, summary_table
-from .session import Session
-from .specs import Spec, split_spec_list
-
 _QUICK_STEPS = 400
+_FORCE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def _ensure_devices(n) -> None:
+    """Arrange for ``n`` visible devices before jax initializes.
+
+    Forced host devices can only be configured via XLA_FLAGS before the
+    first jax import; once jax is loaded this is a no-op and
+    ``host_device_runtime`` raises its actionable error instead.  A
+    pre-existing force flag (e.g. a CI job exporting XLA_FLAGS itself)
+    is never second-guessed, and an existing JAX_PLATFORMS choice is
+    preserved (it selects the platform, not the device count)."""
+    if not n or int(n) <= 1 or "jax" in sys.modules:
+        return
+    xf = os.environ.get("XLA_FLAGS", "")
+    if _FORCE_FLAG not in xf:
+        os.environ["XLA_FLAGS"] = (f"{xf} " if xf else "") + \
+            f"{_FORCE_FLAG}={int(n)}"
+    # Pin the platform even when the caller exported the force flag
+    # themselves: forced host devices are a CPU-platform mode, and on a
+    # machine whose auto-selected platform is not cpu the flag would be
+    # inert (same pin repro.dist.compat / sitecustomize apply).
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 
 def _quicken(evaluators, quick: bool):
     """Apply --quick: cap transport steps unless the spec pins them."""
+    from .specs import Spec
     if not quick:
         return evaluators
     out = []
@@ -42,15 +74,27 @@ def _quicken(evaluators, quick: bool):
 
 
 def cmd_sweep(args) -> int:
+    _ensure_devices(args.devices)
+    from .results import results_to_json, summary_table
+    from .session import Session
+    from .specs import split_spec_list
+
     session = Session()
     evaluators = _quicken(split_spec_list(args.evaluators), args.quick)
     seeds = [int(s) for s in args.seeds.split(",") if s != ""]
-    results = session.sweep(
-        topos=split_spec_list(args.topos),
-        routings=split_spec_list(args.schemes),
-        patterns=split_spec_list(args.patterns),
-        evaluators=evaluators, seeds=seeds,
-        callback=lambda rr: print(summary_table([rr]), flush=True))
+    grid = dict(topos=split_spec_list(args.topos),
+                routings=split_spec_list(args.schemes),
+                patterns=split_spec_list(args.patterns),
+                evaluators=evaluators, seeds=seeds)
+    stream = lambda rr: print(summary_table([rr]), flush=True)  # noqa: E731
+    if args.devices is not None or args.checkpoint:
+        from .dist_sweep import dist_sweep
+        results = dist_sweep(
+            session, session.grid(**grid), devices=args.devices,
+            checkpoint_dir=args.checkpoint or None, callback=stream,
+            log=lambda m: print(m, flush=True))
+    else:
+        results = session.sweep(callback=stream, **grid)
     builds = session.stats["stack_build"]
     hits = session.stats["stack_hit"]
     print(f"# {len(results)} cells; layer/table stacks built {builds}x, "
@@ -63,6 +107,9 @@ def cmd_sweep(args) -> int:
 
 
 def cmd_run(args) -> int:
+    from .results import results_to_json
+    from .session import Session
+
     session = Session()
     (evaluator,) = _quicken([args.evaluator], args.quick)
     rr = session.run(args.topo, args.scheme, args.pattern, evaluator,
@@ -75,6 +122,8 @@ def cmd_run(args) -> int:
 
 
 def cmd_list(_args) -> int:
+    from .catalog import EVALUATORS, ROUTINGS, TOPOLOGIES, TRAFFIC
+
     for title, reg in (("topologies", TOPOLOGIES),
                        ("routing schemes", ROUTINGS),
                        ("traffic patterns", TRAFFIC),
@@ -84,6 +133,27 @@ def cmd_list(_args) -> int:
             defaults = ", ".join(f"{k}={v!r}"
                                  for k, v in sorted(reg.defaults(name).items()))
             print(f"  {name}({defaults})")
+    return 0
+
+
+def cmd_diff(args) -> int:
+    """Cell-for-cell comparison of two sweep artifacts (CI's identity
+    check between the sequential and distributed engines)."""
+    from .results import compare_results, results_from_json
+
+    sides = []
+    for path in (args.a, args.b):
+        with open(path) as f:
+            sides.append(results_from_json(f.read()))
+    diffs = compare_results(sides[0], sides[1], rtol=args.rtol)
+    for d in diffs:
+        print(d)
+    if diffs:
+        print(f"# {len(diffs)} difference(s) between {args.a} and {args.b}",
+              file=sys.stderr)
+        return 1
+    print(f"# identical: {len(sides[0])} cells ({args.a} vs {args.b}, "
+          f"rtol={args.rtol:g})")
     return 0
 
 
@@ -100,6 +170,12 @@ def main(argv=None) -> int:
     sw.add_argument("--seeds", default="0")
     sw.add_argument("--quick", action="store_true")
     sw.add_argument("--json", default="", help="write RunResult list here")
+    sw.add_argument("--devices", type=int, default=None,
+                    help="run the distributed batch engine over N devices "
+                         "(forces N host CPU devices when nothing else "
+                         "configures jax)")
+    sw.add_argument("--checkpoint", default="",
+                    help="resumable sweep: per-cell checkpoint directory")
     sw.set_defaults(fn=cmd_sweep)
 
     rn = sub.add_parser("run", help="run a single cell")
@@ -112,11 +188,24 @@ def main(argv=None) -> int:
     rn.add_argument("--json", default="")
     rn.set_defaults(fn=cmd_run)
 
+    df = sub.add_parser("diff", help="cell-for-cell compare two artifacts")
+    df.add_argument("a")
+    df.add_argument("b")
+    df.add_argument("--rtol", type=float, default=0.0,
+                    help="relative tolerance for float metrics (default: "
+                         "exact)")
+    df.set_defaults(fn=cmd_diff)
+
     ls = sub.add_parser("list", help="show registered axes and defaults")
     ls.set_defaults(fn=cmd_list)
 
     args = ap.parse_args(argv)
-    return args.fn(args)
+    from .specs import SpecError
+    try:
+        return args.fn(args)
+    except SpecError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
 
 
 if __name__ == "__main__":

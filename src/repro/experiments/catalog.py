@@ -42,7 +42,8 @@ from .registry import Registry
 from .specs import Spec, SpecError, SpecLike
 
 __all__ = ["TOPOLOGIES", "ROUTINGS", "TRAFFIC", "EVALUATORS",
-           "RoutingBundle", "RoutingCtx", "topo_spec"]
+           "RoutingBundle", "RoutingCtx", "topo_spec", "transport_plan",
+           "fct_metrics"]
 
 TOPOLOGIES = Registry("topology")
 ROUTINGS = Registry("routing scheme")
@@ -264,21 +265,37 @@ def _fct_metrics(sims) -> Dict[str, float]:
             "finished": finished, "tput_gbs": tput_gbs, "link_util": util}
 
 
+def transport_plan(cell, steps, transport, seeds, dt, flowlet_gap
+                   ) -> Tuple[SimConfig, list]:
+    """The transport evaluator's execution plan for one cell:
+    ``(SimConfig, sim_seeds)``.  Shared by the in-process evaluator below
+    and by :mod:`repro.experiments.dist_sweep`, which runs the same plan
+    through padded device-batched programs — both MUST derive config and
+    seeds identically or the engines' results diverge."""
+    cfg = SimConfig(transport=transport, balancing=cell.bundle.balancing,
+                    n_steps=int(steps), dt=dt, flowlet_gap=flowlet_gap,
+                    seed=cell.seed)
+    sim_seeds = [cell.seed + 1000 * i for i in range(max(1, int(seeds)))]
+    return cfg, sim_seeds
+
+
 @EVALUATORS.register("transport", steps=2000, transport="ndp", seeds=1,
                      dt=10e-6, flowlet_gap=50e-6)
 def _transport(session, cell, steps, transport, seeds, dt, flowlet_gap
                ) -> Tuple[Dict[str, float], Dict[str, Any]]:
     """Flow-level simulation (§7); ``seeds`` > 1 batches a sim-seed sweep
     through one vmapped scan instead of a Python loop."""
-    cfg = SimConfig(transport=transport, balancing=cell.bundle.balancing,
-                    n_steps=int(steps), dt=dt, flowlet_gap=flowlet_gap,
-                    seed=cell.seed)
-    sim_seeds = [cell.seed + 1000 * i for i in range(max(1, int(seeds)))]
+    cfg, sim_seeds = transport_plan(cell, steps, transport, seeds, dt,
+                                    flowlet_gap)
     sims = simulate_seeds(cell.topo, cell.bundle.routing, cell.workload,
                           cfg, sim_seeds)
     meta = {"n_seeds": len(sim_seeds), "transport": transport,
             "balancing": cell.bundle.balancing}
     return _fct_metrics(sims), meta
+
+
+#: public alias — dist_sweep assembles the same record from batched sims.
+fct_metrics = _fct_metrics
 
 
 @EVALUATORS.register("mat", max_hops=16, capacity=1.0)

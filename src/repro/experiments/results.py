@@ -14,7 +14,8 @@ import json
 from typing import Any, Dict, Iterable, List
 
 __all__ = ["RunResult", "results_to_json", "results_from_json",
-           "summary_table"]
+           "summary_table", "order_results", "compare_results",
+           "EXECUTION_META_KEYS"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +64,88 @@ def results_to_json(results: Iterable[RunResult], indent: int = 1) -> str:
 
 def results_from_json(text: str) -> List[RunResult]:
     return [RunResult.from_dict(d) for d in json.loads(text)]
+
+
+# Meta keys that describe HOW a cell was executed (timings, cache
+# hit/miss counters, batch bookkeeping), not WHAT it computed.  They
+# legitimately differ between a sequential sweep and a distributed one
+# (artifact builds land on different cells, walls differ), so the
+# cell-identity comparison below ignores them.
+EXECUTION_META_KEYS = frozenset({
+    "build_s", "build_device_s", "cache_builds", "cache_hits",
+    "sweep_bucket", "sweep_resumed",
+})
+
+
+def order_results(results: Iterable[RunResult],
+                  cell_ids: Iterable[str]) -> List[RunResult]:
+    """Reorder ``results`` to match the canonical ``cell_ids`` sequence.
+
+    The distributed sweep engine executes cells bucket-by-bucket (grouped
+    by shape signature), so completion order depends on bucketing and
+    device count; the emitted artifact must not.  Unknown ids raise —
+    a sweep must account for every planned cell."""
+    by_id: Dict[str, List[RunResult]] = {}
+    for r in results:
+        by_id.setdefault(r.cell_id, []).append(r)
+    out: List[RunResult] = []
+    for cid in cell_ids:
+        bucket = by_id.get(cid)
+        if not bucket:
+            raise KeyError(f"no result for planned cell {cid!r}")
+        out.append(bucket.pop(0))
+    leftover = [cid for cid, rs in by_id.items() if rs]
+    if leftover:
+        raise KeyError(f"results for unplanned cells: {leftover[:3]!r}...")
+    return out
+
+
+def _close(a: float, b: float, rtol: float) -> bool:
+    if a == b:                            # covers ints, exact floats, strings
+        return True
+    if isinstance(a, float) and isinstance(b, float):
+        if a != a and b != b:             # NaN == NaN for identity purposes
+            return True
+        return rtol > 0 and abs(a - b) <= rtol * max(abs(a), abs(b))
+    return False
+
+
+def compare_results(a: Iterable[RunResult], b: Iterable[RunResult],
+                    rtol: float = 0.0) -> List[str]:
+    """Cell-for-cell identity check: returns a list of human-readable
+    mismatch descriptions (empty == identical).
+
+    Cells are matched by ``cell_id``; ``metrics`` and ``meta`` must agree
+    exactly (``rtol`` > 0 allows a relative tolerance on float values,
+    for cross-machine artifact comparison), except ``wall_s`` and the
+    :data:`EXECUTION_META_KEYS` which describe execution, not results."""
+    a, b = list(a), list(b)
+    diffs: List[str] = []
+    bi = {r.cell_id: r for r in b}
+    if len(bi) != len(b):
+        diffs.append("duplicate cell_ids in right-hand results")
+    ai_ids = [r.cell_id for r in a]
+    if sorted(ai_ids) != sorted(bi):
+        only_a = set(ai_ids) - set(bi)
+        only_b = set(bi) - set(ai_ids)
+        diffs.append(f"cell sets differ: only-left={sorted(only_a)[:3]} "
+                     f"only-right={sorted(only_b)[:3]}")
+        return diffs
+    for ra in a:
+        rb = bi[ra.cell_id]
+        for field, da, db in (("metrics", ra.metrics, rb.metrics),
+                              ("meta", ra.meta, rb.meta)):
+            ka = set(da) - EXECUTION_META_KEYS
+            kb = set(db) - EXECUTION_META_KEYS
+            if ka != kb:
+                diffs.append(f"{ra.cell_id}: {field} keys differ "
+                             f"{sorted(ka ^ kb)}")
+                continue
+            for k in sorted(ka):
+                if not _close(da[k], db[k], rtol):
+                    diffs.append(f"{ra.cell_id}: {field}[{k}] "
+                                 f"{da[k]!r} != {db[k]!r}")
+    return diffs
 
 
 def _fmt(v: Any) -> str:

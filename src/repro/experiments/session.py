@@ -179,47 +179,96 @@ class Session:
                                   seed=int(seed))
         fn, kw = EVALUATORS.resolve(spec.evaluator)
         t0 = time.perf_counter()
-        pre = {k: self.stats[k] for k in ("build_wall_s", "build_device_s",
-                                          "stack_build", "stack_hit")}
+        pre = self.stats_snapshot()
         cell = self.resolve(spec)
         metrics, meta = fn(self, cell, **kw)
         wall = time.perf_counter() - t0
         # One consistent snapshot AFTER the evaluator: builds an evaluator
         # triggers itself (e.g. a fabric cell building via the session)
         # count as build time for this cell, not as simulate time.
-        build_s = self.stats["build_wall_s"] - pre["build_wall_s"]
+        return self.finish_result(spec, cell, metrics, meta, pre, wall)
+
+    # Execution-bookkeeping counters snapshotted around each cell so the
+    # per-cell build-vs-simulate split can be attributed (dist_sweep uses
+    # the same pair of hooks around its resolve phase).
+    _SNAPSHOT_KEYS = ("build_wall_s", "build_device_s", "stack_build",
+                      "stack_hit")
+
+    def stats_snapshot(self) -> Dict[str, float]:
+        return {k: self.stats[k] for k in self._SNAPSHOT_KEYS}
+
+    def finish_result(self, spec: ExperimentSpec, cell: ResolvedCell,
+                      metrics: Dict[str, float], ev_meta: Dict[str, Any],
+                      pre: Dict[str, float], wall: float,
+                      extra_meta: Optional[Dict[str, Any]] = None,
+                      post: Optional[Dict[str, float]] = None) -> RunResult:
+        """Assemble the canonical :class:`RunResult` for one evaluated
+        cell.  Both execution engines (the sequential loop and the
+        distributed batch engine) MUST go through this, so a cell's
+        record is identical whichever engine produced it.  ``post``
+        bounds the cell's build-accounting window when builds for other
+        cells happened since (the batch engine resolves every cell
+        before simulating any)."""
+        post = post if post is not None else self.stats_snapshot()
         meta = {"n_routers": cell.topo.n_routers,
                 "n_endpoints": cell.topo.n_endpoints,
                 "n_flows": int(cell.workload.n_flows),
                 # build-vs-simulate split for this cell's artifacts
-                "build_s": build_s,
-                "build_device_s": (self.stats["build_device_s"]
+                "build_s": post["build_wall_s"] - pre["build_wall_s"],
+                "build_device_s": (post["build_device_s"]
                                    - pre["build_device_s"]),
-                "cache_builds": int(self.stats["stack_build"]
+                "cache_builds": int(post["stack_build"]
                                     - pre["stack_build"]),
-                "cache_hits": int(self.stats["stack_hit"]
+                "cache_hits": int(post["stack_hit"]
                                   - pre["stack_hit"]),
-                **table_meta(cell.bundle), **meta}
+                **table_meta(cell.bundle), **ev_meta,
+                **(extra_meta or {})}
         return RunResult(
             topo=spec.topo.format(), routing=spec.routing.format(),
             pattern=spec.pattern.format(), evaluator=spec.evaluator.format(),
             seed=spec.seed, metrics=metrics, meta=meta, wall_s=wall)
 
+    def grid(self, topos: Sequence[SpecLike], routings: Sequence[SpecLike],
+             patterns: Sequence[SpecLike],
+             evaluators: Sequence[SpecLike] = ("transport",),
+             seeds: Iterable[int] = (0,)) -> List[ExperimentSpec]:
+        """The grid's cells in canonical order (topo-major nesting) —
+        the one ordering every sweep artifact is emitted in, whatever
+        engine or execution order actually ran the cells."""
+        return [ExperimentSpec(topo=topo_spec(t), routing=Spec.coerce(r),
+                               pattern=Spec.coerce(p),
+                               evaluator=Spec.coerce(e), seed=int(s))
+                for t in topos for r in routings for p in patterns
+                for e in evaluators for s in seeds]
+
     def sweep(self, topos: Sequence[SpecLike], routings: Sequence[SpecLike],
               patterns: Sequence[SpecLike],
               evaluators: Sequence[SpecLike] = ("transport",),
               seeds: Iterable[int] = (0,),
-              callback: Optional[Callable[[RunResult], None]] = None
-              ) -> List[RunResult]:
-        """Run the full grid through this session's caches."""
+              callback: Optional[Callable[[RunResult], None]] = None,
+              devices: Optional[int] = None,
+              checkpoint_dir: Optional[str] = None) -> List[RunResult]:
+        """Run the full grid through this session's caches.
+
+        ``devices`` routes the grid through the distributed batch engine
+        (:func:`repro.experiments.dist_sweep.dist_sweep`): cells are
+        bucketed by shape signature, vmapped cells x seeds into one
+        program per bucket, and sharded over ``devices`` forced host (or
+        real) devices.  ``devices=1`` uses the same batched engine on
+        one device — per-cell results are identical either way, and
+        identical to this sequential path.  ``checkpoint_dir`` makes the
+        sweep resumable at cell granularity (completed cells are loaded,
+        not re-run)."""
+        if devices is not None or checkpoint_dir is not None:
+            from .dist_sweep import dist_sweep
+            return dist_sweep(
+                self, self.grid(topos, routings, patterns, evaluators, seeds),
+                devices=devices, checkpoint_dir=checkpoint_dir,
+                callback=callback)
         results: List[RunResult] = []
-        for t in topos:
-            for r in routings:
-                for p in patterns:
-                    for e in evaluators:
-                        for s in seeds:
-                            rr = self.run(t, r, p, e, seed=s)
-                            if callback is not None:
-                                callback(rr)
-                            results.append(rr)
+        for spec in self.grid(topos, routings, patterns, evaluators, seeds):
+            rr = self.run(spec)
+            if callback is not None:
+                callback(rr)
+            results.append(rr)
         return results

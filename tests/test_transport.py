@@ -82,13 +82,20 @@ def test_fatpaths_noninferior_on_randomized(setup):
     well')."""
     topo, lr, ecmp = setup
     wl = TR.make_workload(topo, "adversarial", seed=3)
-    fp = TP.simulate(topo, lr, wl, TP.SimConfig(balancing="fatpaths",
-                                                n_steps=1200))
-    ec = TP.simulate(topo, ecmp, wl, TP.SimConfig(balancing="ecmp",
-                                                  n_steps=1200))
-    f_fp, f_ec = fp.fct_stats(), ec.fct_stats()
-    assert f_fp["finished"] >= f_ec["finished"] - 1e-9
-    assert f_fp["p99"] <= f_ec["p99"] * 1.25, (f_fp, f_ec)
+    # p99 of a single sim seed is noisy; compare the seed-mean tail
+    # (simulate_seeds batches the sweep through one vmapped scan).
+    fp = TP.simulate_seeds(topo, lr, wl,
+                           TP.SimConfig(balancing="fatpaths", n_steps=1200),
+                           range(4))
+    ec = TP.simulate_seeds(topo, ecmp, wl,
+                           TP.SimConfig(balancing="ecmp", n_steps=1200),
+                           range(4))
+    f_fp = [r.fct_stats() for r in fp]
+    f_ec = [r.fct_stats() for r in ec]
+    assert (np.mean([f["finished"] for f in f_fp])
+            >= np.mean([f["finished"] for f in f_ec]) - 1e-9)
+    assert (np.mean([f["p99"] for f in f_fp])
+            <= np.mean([f["p99"] for f in f_ec]) * 1.25), (f_fp, f_ec)
 
 
 def test_star_is_topology_free_baseline():
