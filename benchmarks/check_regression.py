@@ -1,10 +1,10 @@
 """CI perf gate: fail when guarded benchmark timings regress.
 
   PYTHONPATH=src python -m benchmarks.check_regression NEW.json \\
-      [--baseline BENCH_PR4.json] [--threshold 1.25]
+      [--baseline BENCH_PR5.json] [--threshold 1.25]
 
 Compares timings for the guarded key patterns below against the
-committed baseline (``BENCH_PR4.json``, produced by
+committed baseline (``BENCH_PR5.json``, produced by
 ``python -m benchmarks.run --quick --json``) — min-over-samples where a
 row records one, else the median headline (see ``_us``).  The fail
 decision is two-level: a guarded GROUP (one per pattern below) fails
@@ -12,7 +12,12 @@ when the geometric mean of its calibrated ratios exceeds ``threshold``;
 a single row fails above ``threshold**2`` (see :func:`compare` for the
 noise rationale).  A guarded key MISSING from either side also fails
 (renaming a guarded benchmark must not silently disable its gate, and a
-stale baseline must not pass it).
+stale baseline must not pass it) — with one carve-out: a guarded GROUP
+with no key in the baseline at all is a *new* guarded group (its PR
+commits the refreshed baseline alongside), reported as a notice rather
+than a failure so the new run can still be compared against an older
+baseline (e.g. BENCH_PR5.json vs the PR4 baseline demonstrates the
+fused-transport speedup on the keys both sides know).
 
 The FULL baseline-vs-current table (every key present on either side,
 guarded rows flagged) is printed on success as well as failure, so the
@@ -31,7 +36,13 @@ Guarded:
   * ``fig12/disjoint/…``        — bench_layers COLD layer-stack builds
                                   (the batched semiring build path);
   * ``transport/steptime/…``    — bench_transport per-step scan cost
-                                  (paths precomputed outside the scan);
+                                  (fused waterfill + adaptive horizon,
+                                  the default execution path);
+  * ``transport/fusedstep/…``   — per-transport-mode step cost with the
+                                  horizon forced full (isolates the
+                                  fused water-filling step body);
+  * ``transport/earlyexit/…``   — 4-seed vmapped sweep at paper-default
+                                  depth (the adaptive horizon's win);
   * ``sweep/dist/…``            — bench_sweep distributed-engine wall
                                   time for the whole quick grid (the
                                   scale keystone's contract).
@@ -45,7 +56,9 @@ import math
 import re
 import sys
 
-GUARDED = [r"^fig12/disjoint/", r"^transport/steptime/", r"^sweep/dist/"]
+GUARDED = [r"^fig12/disjoint/", r"^transport/steptime/",
+           r"^transport/fusedstep/", r"^transport/earlyexit/",
+           r"^sweep/dist/"]
 CALIBRATE = r"^kernels/pathcount/"
 
 
@@ -90,12 +103,19 @@ def compare(baseline: dict, new: dict, threshold: float):
     guarded slice.  ``missing`` — guarded keys absent from EITHER side
     as (name, side) pairs (new-side missing = renamed benchmark,
     baseline-side missing = stale baseline — both must fail, not
-    silently pass).  ``cal`` — the machine calibration factor."""
+    silently pass).  EXCEPTION: baseline-side misses whose whole guarded
+    group is absent from the baseline are a NEW guarded group, returned
+    separately as ``new_groups`` (a notice, not a failure — the older
+    baseline simply predates that gate; see module docstring).
+    ``cal`` — the machine calibration factor."""
     guard = re.compile("|".join(GUARDED))
     cal = _calibration(baseline, new)
     rows = []
     failures = []
     missing = []
+    new_groups = []
+    base_has_group = {pat: any(re.search(pat, n) for n in baseline)
+                      for pat in GUARDED}
     groups = {pat: [] for pat in GUARDED}
     for name in sorted(set(baseline) | set(new)):
         guarded = bool(guard.search(name))
@@ -107,7 +127,11 @@ def compare(baseline: dict, new: dict, threshold: float):
             continue
         if name not in baseline:
             if guarded:
-                missing.append((name, "baseline"))
+                pat = next(p for p in GUARDED if re.search(p, name))
+                if base_has_group[pat]:
+                    missing.append((name, "baseline"))
+                else:
+                    new_groups.append((name, pat))
             rows.append((name, guarded, float("nan"), _us(new[name]),
                          float("nan")))
             continue
@@ -141,13 +165,13 @@ def compare(baseline: dict, new: dict, threshold: float):
         if gm > bound:
             failures.append(f"group {pat!r}: geomean x{gm:.2f} over "
                             f"{len(ratios)} key(s) > x{bound:.2f}")
-    return failures, rows, missing, cal
+    return failures, rows, missing, new_groups, cal
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("new", help="bench --json output to check")
-    ap.add_argument("--baseline", default="BENCH_PR4.json")
+    ap.add_argument("--baseline", default="BENCH_PR5.json")
     ap.add_argument("--threshold", type=float, default=1.25)
     args = ap.parse_args(argv)
 
@@ -156,7 +180,8 @@ def main(argv=None) -> int:
     with open(args.new) as f:
         new = json.load(f)
 
-    failures, rows, missing, cal = compare(baseline, new, args.threshold)
+    failures, rows, missing, new_groups, cal = compare(baseline, new,
+                                                       args.threshold)
     print(f"machine calibration factor: x{cal:.2f} ({CALIBRATE!r} key)")
     n_guarded = 0
     row_bound = args.threshold * args.threshold
@@ -166,6 +191,10 @@ def main(argv=None) -> int:
         flag = " <-- REGRESSION" if guarded and ratio > row_bound else ""
         print(f"{mark} {name:45s} base={b:10.1f}us new={v:10.1f}us "
               f"x{ratio:5.2f} (calibrated){flag}")
+    for name, pat in new_groups:
+        print(f"NOTE: guarded key {name!r} opens a new group {pat!r} "
+              "absent from this baseline (gates once the refreshed "
+              "baseline is committed)")
     for name, side in missing:
         print(f"ERROR: guarded key {name!r} missing from {side}",
               file=sys.stderr)

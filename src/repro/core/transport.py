@@ -27,6 +27,29 @@ Modelled per paper §3 / §7.1.3:
 
 Endpoint NICs are modelled as virtual links (injection + ejection), so
 incast (all-to-one) and concentration effects are captured.
+
+Execution structure (PR 5):
+
+* **Fused water-filling step** — the per-step scatter/gather/min inner
+  loop is one :func:`repro.kernels.waterfill.waterfill_step` call: a
+  single fused Pallas kernel on TPU, the jnp oracle on CPU
+  (``SimConfig.kernel_backend`` / ``REPRO_KERNEL_BACKEND`` override).
+* **PRNG derivation** — per-flow keys ``fold_in(key, flow)`` are hoisted
+  out of the step body; step draws come from
+  ``uniform(fold_in(flow_key, chunk), (horizon_chunk, 2))[step_in_chunk]``
+  so one bulk generation per chunk replaces the per-step vmapped
+  ``fold_in`` pair.  Row ``i``'s draws still depend only on
+  ``(key, i, step)`` — the padding-safety property the distributed sweep
+  engine's bit-identity guarantee rests on — but the draws themselves
+  differ from the pre-PR5 stream (and change if ``horizon_chunk``
+  changes), so any seed-sensitive baseline re-baselines with this PR.
+* **Adaptive horizon** — the scan runs as a ``lax.while_loop`` over
+  fixed-size chunks of ``horizon_chunk`` steps that stops as soon as
+  every flow is finished or provably stuck (weight 0 forever: no layer
+  it can ever pick routes it).  Skipped steps are exact no-ops on every
+  result-bearing state component, so early exit returns results
+  bit-identical to the full-horizon run; cells whose flows stay active
+  (slow but routable) run the full ``n_steps``.
 """
 
 from __future__ import annotations
@@ -39,6 +62,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels.waterfill import waterfill_step
 from .layers import LayeredRouting
 from .topology import Topology
 from .traffic import FlowWorkload
@@ -65,6 +89,9 @@ class SimConfig:
     tcp_ai: float = 0.02            # additive increase per step (frac of line)
     tcp_md: float = 0.5             # multiplicative decrease (tcp)
     dctcp_md: float = 0.85          # gentle decrease (dctcp)
+    horizon_chunk: int = 64         # scan chunk size (also the PRNG block)
+    adaptive_horizon: bool = True   # stop once all flows are done/stuck
+    kernel_backend: str = ""        # "" = auto | "pallas" | "ref"
     seed: int = 0
 
 
@@ -164,8 +191,13 @@ def _virtual_links(topo: Topology, wl: FlowWorkload):
     :func:`shape_signature` probe."""
     eix = topo.edge_index_matrix()              # (N, N) -> directed edge id
     n_edges = int((eix >= 0).sum())
-    n_ep = wl.src.max() + 1 if len(wl.src) else 1
-    n_ep = int(max(n_ep, wl.dst.max() + 1))
+    # Empty workloads get one (unused) endpoint slot: max() on an empty
+    # array raises, and every downstream shape stays well-formed with
+    # n_ep = 1 (a zero-flow cell simulates to an all-empty SimResult).
+    if len(wl.src):
+        n_ep = int(max(wl.src.max(), wl.dst.max()) + 1)
+    else:
+        n_ep = 1
     return eix, n_edges, n_ep
 
 
@@ -237,6 +269,20 @@ def _flow_uniforms(key, f):
     return jax.vmap(lambda k: jax.random.uniform(k, (2,)))(keys)
 
 
+def _chunk_uniforms(flow_keys, c, chunk: int):
+    """(chunk, F, 2) U[0,1) draws for one scan chunk, generated in one
+    bulk pass instead of two vmapped ``fold_in`` sweeps per step.
+
+    Draw ``[s, i]`` depends only on ``(flow_keys[i], c, s)`` — per-flow
+    keys keep the padding-safety property of :func:`_flow_uniforms`, and
+    the counter offset inside the fixed-size ``(chunk, 2)`` block pins
+    each step's bits regardless of how many steps of the chunk actually
+    execute (the tail chunk slices this same block)."""
+    cks = jax.vmap(jax.random.fold_in, in_axes=(0, None))(flow_keys, c)
+    u = jax.vmap(lambda k: jax.random.uniform(k, (chunk, 2)))(cks)
+    return jnp.moveaxis(u, 0, 1)
+
+
 def _pick_layers(u, usable, minimal_only_mask):
     """Uniform choice among usable layers per flow, driven by one
     per-flow uniform ``u`` (layer 0 fallback): pick the r-th usable
@@ -255,12 +301,17 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
     line_bytes = jnp.float32(cfg.line_rate * cfg.dt)   # bytes per step at line
 
     minimal_only = jnp.ones(n_layers, dtype=bool)
-    is_fatpaths = cfg.balancing == "fatpaths"
     reroute = cfg.balancing in ("letflow", "fatpaths")
+    chunk = max(1, int(cfg.horizon_chunk))
+    n_full, rem = divmod(n_steps, chunk)
 
     k_init, k_scan = jax.random.split(key0)
     layer0 = _pick_layers(_flow_uniforms(k_init, f)[:, 0], arrs["usable"],
                           minimal_only)
+    # Per-flow key table, hoisted out of the step body: step randomness
+    # is (flow key, chunk, step-in-chunk) — see _chunk_uniforms.
+    flow_keys = jax.vmap(lambda i: jax.random.fold_in(k_scan, i))(
+        jnp.arange(f))
 
     if cfg.transport == "ndp":
         rate0 = jnp.ones(f, dtype=jnp.float32)         # line rate start
@@ -273,7 +324,6 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
         rate=rate0,
         fct=jnp.full(f, jnp.nan, dtype=jnp.float32),
         hops=jnp.zeros(f, dtype=jnp.float32),
-        key=k_scan,
         # Per-flow accumulators (elementwise, exact under flow padding);
         # the utilization ratio is taken on host AFTER stripping padding,
         # so batched and standalone runs report bit-identical metrics.
@@ -282,43 +332,55 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
     )
 
     cap = jnp.ones(e_tot, dtype=jnp.float32)           # capacities in line units
+    frows = jnp.arange(f)
+    # One packed (L, F, H+4) record — path edges | routed | hop count —
+    # so the step body gathers by current layer ONCE, not three times.
+    n_slots = arrs["path_edges"].shape[2]
+    packed = jnp.concatenate(
+        [arrs["path_edges"].astype(jnp.int32),
+         arrs["routed"].astype(jnp.int32)[..., None],
+         arrs["path_hops"].astype(jnp.int32)[..., None]], axis=2)
 
-    def step(state, i):
+    # Provably-stuck support for the adaptive horizon: a flow whose
+    # current layer cannot route it AND that can never re-roll onto a
+    # routing layer (re-rolls pick among `usable` layers, falling back
+    # to layer 0) has weight 0 on every future step.  Without re-routing
+    # the layer is pinned, so the current layer alone decides.
+    if reroute:
+        pickable = arrs["usable"] & minimal_only[None, :]
+        pickable = jnp.where(pickable.any(axis=1, keepdims=True), pickable,
+                             (jnp.arange(n_layers) == 0)[None, :])
+        pick_routable = jnp.any(pickable & arrs["routed"].T, axis=1)  # (F,)
+    else:
+        pick_routable = jnp.zeros(f, dtype=bool)
+
+    def step(state, xs):
+        if reroute:
+            i, u = xs
+        else:
+            i = xs
         t = i.astype(jnp.float32) * cfg.dt
-        key, k_step = jax.random.split(state["key"])
         started = arrs["start"] <= t
         done = state["remaining"] <= 0
         active = started & ~done
 
         # One gather by current layer replaces the per-step table walk:
-        # paths were materialised once in _prepare.
-        frows = jnp.arange(f)
-        all_edges = arrs["path_edges"][state["layer"], frows]   # (F, H+2)
-        routed = arrs["routed"][state["layer"], frows]
-        n_hops = arrs["path_hops"][state["layer"], frows]
-        all_edges = jnp.where(active[:, None] & routed[:, None],
-                              jnp.where(all_edges < 0, e_tot - 1, all_edges),
+        # paths were materialised once in _prepare, packed once above.
+        g = packed[state["layer"], frows]                       # (F, H+4)
+        edges = g[:, :n_slots]
+        routed = g[:, n_slots] > 0
+        n_hops = g[:, n_slots + 1].astype(jnp.float32)
+        send = active & routed
+        all_edges = jnp.where(send[:, None],
+                              jnp.where(edges < 0, e_tot - 1, edges),
                               e_tot - 1)
 
-        # --- iterative max-min approximation (feasible by construction) ----
-        w = active.astype(jnp.float32) * routed.astype(jnp.float32)
+        # --- fused max-min water-filling (feasible by construction) -------
+        w = send.astype(jnp.float32)
         desired = jnp.minimum(state["rate"], 1.0) * w
-        onehot_count = jnp.zeros(e_tot).at[all_edges.reshape(-1)].add(
-            jnp.repeat(w, all_edges.shape[1]))
-        fair = cap / jnp.maximum(onehot_count, 1e-9)
-        adv = jnp.min(jnp.where(all_edges < e_tot - 1,
-                                fair[all_edges], jnp.inf), axis=1)
-        d = jnp.minimum(desired, adv)
-        for _ in range(cfg.fair_iters):
-            load = jnp.zeros(e_tot).at[all_edges.reshape(-1)].add(
-                jnp.repeat(d, all_edges.shape[1]))
-            scale = jnp.minimum(1.0, cap / jnp.maximum(load, 1e-9))
-            s = jnp.min(jnp.where(all_edges < e_tot - 1,
-                                  scale[all_edges], jnp.inf), axis=1)
-            s = jnp.where(jnp.isfinite(s), s, 0.0)
-            d = d * s
-        sent = d  # fraction of line rate actually achieved this step
-        share = adv  # the fair share signal (congestion feedback)
+        sent, share = waterfill_step(all_edges, w, desired, cap,
+                                     fair_iters=cfg.fair_iters,
+                                     backend=cfg.kernel_backend or None)
 
         delivered = sent * line_bytes
         new_remaining = jnp.maximum(state["remaining"] - delivered * w, 0.0)
@@ -346,7 +408,6 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
             slack = 1.0 - jnp.clip(sent, 0.0, 1.0)
             p_gap = jnp.clip(cfg.dt / cfg.flowlet_gap
                              * (slack + cfg.gap_eps), 0.0, 1.0)
-            u = _flow_uniforms(k_step, f)                # padding-safe draws
             roll = u[:, 0] < p_gap
             newpick = _pick_layers(u[:, 1], arrs["usable"], minimal_only)
             layer = jnp.where(roll & active, newpick, state["layer"])
@@ -354,12 +415,58 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
             layer = state["layer"]
 
         out = dict(remaining=new_remaining, layer=layer, rate=rate, fct=fct,
-                   hops=hops, key=key, sent_acc=state["sent_acc"] + sent,
+                   hops=hops, sent_acc=state["sent_acc"] + sent,
                    w_acc=state["w_acc"] + w)
         return out, None
 
-    final, _ = jax.lax.scan(step, init, jnp.arange(n_steps))
-    return final
+    def run_chunk(state, c, length: int):
+        steps_i = c * chunk + jnp.arange(length)
+        if reroute:
+            # Full (chunk, F, 2) block even for the tail: a step's draws
+            # must not depend on how many steps of its chunk execute.
+            u = _chunk_uniforms(flow_keys, c, chunk)[:length]
+            xs = (steps_i, u)
+        else:
+            xs = steps_i
+        state, _ = jax.lax.scan(step, state, xs)
+        return state
+
+    def exhausted(state):
+        routed_cur = arrs["routed"][state["layer"], frows]
+        stuck = ~routed_cur & ~pick_routable
+        return jnp.all((state["remaining"] <= 0.0) | stuck)
+
+    # Adaptive horizon: fixed-size chunks under a while_loop.  Once every
+    # flow is done or provably stuck, each further step is an exact no-op
+    # on every result-bearing state component (remaining/fct/hops/accs;
+    # weight-0 flows send nothing and accumulate nothing), so stopping
+    # early is bit-identical to running all n_steps.  Only result-inert
+    # components keep evolving full-horizon (a done tcp flow's rate ramp,
+    # a stuck flow's layer re-rolls) — none of them feed SimResult.
+    if n_full:
+        def w_cond(carry):
+            state, c = carry
+            go = c < n_full
+            if cfg.adaptive_horizon:
+                go = go & ~exhausted(state)
+            return go
+
+        def w_body(carry):
+            state, c = carry
+            return run_chunk(state, c, chunk), c + 1
+
+        state, c_run = jax.lax.while_loop(w_cond, w_body,
+                                          (init, jnp.int32(0)))
+    else:
+        state, c_run = init, jnp.int32(0)
+    if rem:
+        # The tail rides chunk index n_full unconditionally (running it
+        # after an early exit is the same no-op as the skipped chunks).
+        state = run_chunk(state, n_full, rem)
+    # horizon_chunks is execution bookkeeping (how far the while_loop
+    # ran), never a result: downstream result assembly ignores it and
+    # the sweep engines report it as execution meta only.
+    return dict(state, horizon_chunks=c_run)
 
 
 _run_scan = functools.partial(jax.jit,

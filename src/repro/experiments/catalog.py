@@ -265,28 +265,40 @@ def _fct_metrics(sims) -> Dict[str, float]:
             "finished": finished, "tput_gbs": tput_gbs, "link_util": util}
 
 
-def transport_plan(cell, steps, transport, seeds, dt, flowlet_gap
-                   ) -> Tuple[SimConfig, list]:
+def transport_plan(cell, steps, transport, seeds, dt, flowlet_gap,
+                   adaptive=1, chunk=64) -> Tuple[SimConfig, list]:
     """The transport evaluator's execution plan for one cell:
     ``(SimConfig, sim_seeds)``.  Shared by the in-process evaluator below
     and by :mod:`repro.experiments.dist_sweep`, which runs the same plan
     through padded device-batched programs — both MUST derive config and
-    seeds identically or the engines' results diverge."""
+    seeds identically or the engines' results diverge.
+
+    ``adaptive`` toggles the early-exit horizon (results are identical
+    either way — it only changes how many scan chunks execute), and
+    ``REPRO_FULL_HORIZON=1`` force-disables it process-wide WITHOUT
+    changing any spec string: the nightly CI job uses that to prove an
+    early-exit sweep artifact equals a full-horizon one cell-for-cell.
+    ``chunk`` is the scan chunk size; unlike ``adaptive`` it feeds the
+    PRNG block layout, so changing it changes the simulated draws."""
+    import os
+    adaptive_on = bool(int(adaptive)) and \
+        os.environ.get("REPRO_FULL_HORIZON", "") != "1"
     cfg = SimConfig(transport=transport, balancing=cell.bundle.balancing,
                     n_steps=int(steps), dt=dt, flowlet_gap=flowlet_gap,
+                    horizon_chunk=int(chunk), adaptive_horizon=adaptive_on,
                     seed=cell.seed)
     sim_seeds = [cell.seed + 1000 * i for i in range(max(1, int(seeds)))]
     return cfg, sim_seeds
 
 
 @EVALUATORS.register("transport", steps=2000, transport="ndp", seeds=1,
-                     dt=10e-6, flowlet_gap=50e-6)
-def _transport(session, cell, steps, transport, seeds, dt, flowlet_gap
-               ) -> Tuple[Dict[str, float], Dict[str, Any]]:
+                     dt=10e-6, flowlet_gap=50e-6, adaptive=1, chunk=64)
+def _transport(session, cell, steps, transport, seeds, dt, flowlet_gap,
+               adaptive, chunk) -> Tuple[Dict[str, float], Dict[str, Any]]:
     """Flow-level simulation (§7); ``seeds`` > 1 batches a sim-seed sweep
     through one vmapped scan instead of a Python loop."""
     cfg, sim_seeds = transport_plan(cell, steps, transport, seeds, dt,
-                                    flowlet_gap)
+                                    flowlet_gap, adaptive, chunk)
     sims = simulate_seeds(cell.topo, cell.bundle.routing, cell.workload,
                           cfg, sim_seeds)
     meta = {"n_seeds": len(sim_seeds), "transport": transport,

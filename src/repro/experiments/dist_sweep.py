@@ -30,6 +30,15 @@ simulation, per-cell results are IDENTICAL to the sequential engine and
 independent of device count — CI asserts sequential == ``--devices 8``
 cell-for-cell (see :func:`repro.experiments.results.compare_results`).
 
+The transport scan's adaptive horizon (PR 5) composes with all of the
+above: a batched ``lax.while_loop`` stops each element's chunked scan
+as soon as its flows are done or provably stuck, which jax's batching
+rule applies per element (finished elements' carries are frozen by
+``select``), so early exit stays bit-identical under vmap/shard_map
+too.  The executed chunk count is surfaced as ``sweep_chunks`` in each
+cell's meta — execution bookkeeping (like ``sweep_bucket``), never part
+of the results, and ignored by :func:`compare_results`.
+
 Sweeps are resumable: with a checkpoint directory every finished cell is
 committed (atomic per-cell JSON, :class:`repro.ckpt.SweepCheckpoint`)
 and a re-run loads completed cells instead of re-simulating them.
@@ -266,11 +275,15 @@ def _dispatch_bucket(works: List[_Work], rt: Runtime, bucket_index: int):
 
 
 def _finalize_bucket(works: List[_Work], finals, elements
-                     ) -> Dict[int, list]:
+                     ) -> Tuple[Dict[int, list], Dict[int, int]]:
     """Block on one bucket's device results and split them back into
     per-cell, per-seed :class:`SimResult`s (padding stripped).  Nested
     seed batches come back as (C, S, ...) leaves; flattening them
-    cell-major matches the flat ``elements`` order exactly."""
+    cell-major matches the flat ``elements`` order exactly.
+
+    Also returns each cell's executed chunk count (the adaptive
+    horizon's early-exit depth, max over its sim seeds) — execution
+    bookkeeping for the sweep meta, never part of the results."""
     elements, nested = elements
     n_elem = len(elements)
 
@@ -283,12 +296,14 @@ def _finalize_bucket(works: List[_Work], finals, elements
     finals = {k: flat(v)
               for k, v in jax.block_until_ready(finals).items()}
     sims: Dict[int, list] = {wi: [] for wi in range(len(works))}
+    chunks: Dict[int, int] = {wi: 0 for wi in range(len(works))}
     for i, (wi, s) in enumerate(elements):
         w = works[wi]
         sims[wi].append(transport_mod.batch_result(
             w.size, {k: v[i] for k, v in finals.items()},
             dataclasses.replace(w.cfg, seed=s), n_flows=w.n_flows))
-    return sims
+        chunks[wi] = max(chunks[wi], int(finals["horizon_chunks"][i]))
+    return sims, chunks
 
 
 def dist_sweep(session: Session, cells: List[ExperimentSpec], *,
@@ -372,7 +387,7 @@ def dist_sweep(session: Session, cells: List[ExperimentSpec], *,
 
     def finalize_oldest():
         bi, works, finals, desc, t_disp = in_flight.pop(0)
-        sims = _finalize_bucket(works, finals, desc)
+        sims, chunks = _finalize_bucket(works, finals, desc)
         bucket_wall = time.perf_counter() - t_disp
         for wi, w in enumerate(works):
             metrics = fct_metrics(sims[wi])
@@ -380,7 +395,11 @@ def dist_sweep(session: Session, cells: List[ExperimentSpec], *,
                                                 / max(1, len(desc[0])))
             results.append(emit(session.finish_result(
                 w.spec, w.cell, metrics, w.ev_meta, w.pre, wall,
-                extra_meta={"sweep_bucket": bi}, post=w.post)))
+                extra_meta={"sweep_bucket": bi,
+                            # adaptive-horizon early-exit depth: how many
+                            # full scan chunks ran (execution meta — the
+                            # sequential engine legitimately omits it).
+                            "sweep_chunks": chunks[wi]}, post=w.post)))
 
     for bi, works in enumerate(buckets.values()):
         t_disp = time.perf_counter()

@@ -73,7 +73,7 @@ def results_from_json(text: str) -> List[RunResult]:
 # cell-identity comparison below ignores them.
 EXECUTION_META_KEYS = frozenset({
     "build_s", "build_device_s", "cache_builds", "cache_hits",
-    "sweep_bucket", "sweep_resumed",
+    "sweep_bucket", "sweep_resumed", "sweep_chunks",
 })
 
 

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["pathcount_ref", "gf_matmul_ref", "attention_ref",
-           "semiring_matmul_ref"]
+           "semiring_matmul_ref", "waterfill_ref"]
 
 
 def pathcount_ref(a: jnp.ndarray, b: jnp.ndarray, sat: float = 3.0e38) -> jnp.ndarray:
@@ -57,6 +57,41 @@ def semiring_matmul_ref(a: jnp.ndarray, b: jnp.ndarray,
             return jax.vmap(_minplus_2d)(a, b)
         return _minplus_2d(a, b)
     raise ValueError(f"unknown semiring {semiring!r}")
+
+
+def waterfill_ref(edges: jnp.ndarray, w: jnp.ndarray, desired: jnp.ndarray,
+                  cap: jnp.ndarray, fair_iters: int = 2):
+    """Oracle for :func:`repro.kernels.waterfill.waterfill_step`.
+
+    One max-min water-filling transport step over virtual links:
+
+    * ``edges`` (F, S) int32 — link id per flow per hop slot; the LAST id
+      (``cap.shape[0] - 1``) is the write-only trash slot (inactive flows
+      and padding point there; it is excluded from every min);
+    * ``w`` (F,) — flow weights (1 = sends this step, 0 = inert);
+    * ``desired`` (F,) — requested rate in line units;
+    * ``cap`` (E,) — link capacities in line units.
+
+    Returns ``(sent, share)``: the achieved rate after ``fair_iters``
+    feasibility refinements (never oversubscribing any link), and the
+    raw fair-share signal (the congestion feedback transports consume).
+    """
+    e_tot = cap.shape[0]
+    w = w.astype(jnp.float32)
+    live = edges < e_tot - 1
+    count = jnp.zeros(e_tot, jnp.float32).at[edges].add(
+        jnp.broadcast_to(w[:, None], edges.shape))
+    fair = cap / jnp.maximum(count, 1e-9)
+    share = jnp.min(jnp.where(live, fair[edges], jnp.inf), axis=1)
+    d = jnp.minimum(desired, share)
+    for _ in range(fair_iters):
+        load = jnp.zeros(e_tot, jnp.float32).at[edges].add(
+            jnp.broadcast_to(d[:, None], edges.shape))
+        scale = jnp.minimum(1.0, cap / jnp.maximum(load, 1e-9))
+        s = jnp.min(jnp.where(live, scale[edges], jnp.inf), axis=1)
+        s = jnp.where(jnp.isfinite(s), s, 0.0)
+        d = d * s
+    return d, share
 
 
 def gf_matmul_ref(a: jnp.ndarray, b: jnp.ndarray, p: int) -> jnp.ndarray:

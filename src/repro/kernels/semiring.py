@@ -31,14 +31,13 @@ wrapper over the ``"count"`` instance of this engine.
 from __future__ import annotations
 
 import functools
-import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from . import ref
+from . import interpret_default, kernel_backend, ref
 
 __all__ = ["semiring_matmul", "SEMIRINGS", "SAT", "default_backend"]
 
@@ -54,22 +53,12 @@ _ZERO = {"count": 0.0, "bool": 0.0, "minplus": jnp.inf}
 
 def default_backend() -> str:
     """``pallas`` on TPU, ``ref`` (jnp/XLA) elsewhere; override with
-    ``REPRO_SEMIRING_BACKEND=pallas|ref``."""
-    env = os.environ.get("REPRO_SEMIRING_BACKEND", "")
-    if env in ("pallas", "ref"):
-        return env
-    return "pallas" if jax.default_backend() == "tpu" else "ref"
+    ``REPRO_KERNEL_BACKEND=pallas|ref`` (the shared kernel-suite switch;
+    ``REPRO_SEMIRING_BACKEND`` survives as a deprecated alias)."""
+    return kernel_backend()
 
 
-def _interp(flag: Optional[bool]) -> bool:
-    if flag is not None:
-        return flag
-    env = os.environ.get("REPRO_PALLAS_INTERPRET", "")
-    if env in ("0", "1"):
-        return env == "1"
-    # Unset: compile the Mosaic kernel on TPU, interpret elsewhere —
-    # the auto backend must never leave a TPU silently interpreting.
-    return jax.default_backend() != "tpu"
+_interp = interpret_default
 
 
 # -----------------------------------------------------------------------------
@@ -143,6 +132,9 @@ def semiring_matmul(a: jnp.ndarray, b: jnp.ndarray, semiring: str = "count",
         raise ValueError(f"unknown semiring {semiring!r}; "
                          f"choose from {SEMIRINGS}")
     backend = backend or default_backend()
+    if backend not in ("pallas", "ref"):
+        raise ValueError(f"unknown backend {backend!r}; "
+                         "choose 'pallas' or 'ref'")
     if backend == "ref":
         return ref.semiring_matmul_ref(a, b, semiring, sat=sat)
     fn = functools.partial(_pallas_matmul, semiring=semiring, bm=bm, bn=bn,

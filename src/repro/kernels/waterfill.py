@@ -1,0 +1,194 @@
+"""Fused max-min water-filling transport step (paper §7.1.3).
+
+The flow-level simulator's per-step inner loop is a scatter/gather
+ping-pong over virtual links: scatter flow weights to count link
+claimants, gather each link's fair share back, take the per-flow min
+across hop slots, then repeat ``fair_iters`` times with the provisional
+demands to keep every link feasible.  Expressed in jnp that is
+``2 * (1 + fair_iters)`` scatter/gather dispatches per simulated step —
+the dominant cost of every transport sweep cell after the path engine
+(PR 3) moved path derivation out of the scan.
+
+This module fuses the WHOLE step into one tiled Pallas kernel over the
+``(F, S)`` path-edge layout (S = hop slots + injection + ejection NIC):
+
+* grid ``(1 + fair_iters, 2, F_tiles)`` — rounds x {scatter, reduce}
+  phases x flow tiles, executed sequentially on a TPU core; ALL state
+  that crosses rounds or flow tiles (link loads, provisional per-flow
+  demands, fair shares) lives in VMEM scratch, because the output
+  blocks are revisited at non-consecutive grid iterations and are
+  therefore write-only (each visit writes the scratch state; the final
+  sweep's write-back is the refined result);
+* the scatter phase accumulates per-link claims through a one-hot
+  compare against a lane iota, tile by tile over the link axis (the
+  standard MXU/VPU scatter-as-matmul layout — no serialized scatter);
+* the reduce phase re-reads the accumulated loads, forms fair shares
+  (round 0) or feasibility scales (later rounds), gathers them back
+  through the same one-hot tiles and takes the masked min across hop
+  slots — the trash link (id ``e_tot - 1``) never enters a min;
+* round 0 writes the fair-share signal (``share``, the congestion
+  feedback) and the provisional demand; later rounds refine the demand
+  in place (``sent``).
+
+The jnp oracle (:func:`repro.kernels.ref.waterfill_ref`) is the CPU
+fast path — XLA's native scatter beats an interpreted kernel — and the
+backend convention matches :mod:`repro.kernels.semiring`:
+auto (``pallas`` on TPU, ``ref`` elsewhere), overridable via
+``REPRO_KERNEL_BACKEND`` or an explicit ``backend=`` argument.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import interpret_default, kernel_backend, ref
+
+__all__ = ["waterfill_step"]
+
+
+def _waterfill_kernel(edges_ref, w_ref, desired_ref, cap_ref, sent_ref,
+                      share_ref, load_ref, d_ref, adv_ref, *, e_tot: int,
+                      be: int, n_e_tiles: int, bf: int):
+    r = pl.program_id(0)          # water-filling round (0 = fair share)
+    p = pl.program_id(1)          # 0 = scatter loads, 1 = reduce per flow
+    t = pl.program_id(2)          # flow tile
+    edges = edges_ref[...]                                   # (bf, S) int32
+    _, s = edges.shape
+    # ALL cross-round/cross-tile state lives in VMEM scratch (load_ref:
+    # link loads; d_ref/adv_ref: per-flow demand and fair share).  The
+    # output blocks are revisited at every (r, p) — NON-consecutive grid
+    # iterations — so they are write-only and written on every visit;
+    # only the final sweep's values survive the last write-back, which is
+    # exactly the refined result.  (Reading an output block back after a
+    # non-consecutive revisit is undefined on compiled Mosaic.)
+    rows = pl.ds(t * bf, bf)
+
+    @pl.when(p == 0)
+    def _scatter():
+        @pl.when(t == 0)
+        def _reset():
+            load_ref[...] = jnp.zeros_like(load_ref)
+
+        # Round 0 claims with the flow weight; later rounds re-scatter the
+        # provisional demand scratch (written by round r-1's reduce phase).
+        val = jnp.where(r == 0, w_ref[...], d_ref[rows])     # (bf, 1)
+
+        def etile(ei, _):
+            ids = ei * be + jax.lax.broadcasted_iota(jnp.int32, (1, 1, be), 2)
+            onehot = edges[:, :, None] == ids                # (bf, S, be)
+            contrib = jnp.sum(jnp.where(onehot, val[:, 0:1, None], 0.0),
+                              axis=(0, 1))[None, :]          # (1, be)
+            load_ref[:, pl.ds(ei * be, be)] = (
+                load_ref[:, pl.ds(ei * be, be)] + contrib)
+            return 0
+
+        jax.lax.fori_loop(0, n_e_tiles, etile, 0)
+
+    @pl.when(p == 1)
+    def _reduce():
+        def etile(ei, acc):
+            ids = ei * be + jax.lax.broadcasted_iota(jnp.int32, (1, 1, be), 2)
+            onehot = edges[:, :, None] == ids                # (bf, S, be)
+            cap_t = cap_ref[:, pl.ds(ei * be, be)]           # (1, be)
+            load_t = load_ref[:, pl.ds(ei * be, be)]
+            per_link = cap_t / jnp.maximum(load_t, 1e-9)     # fair (round 0)
+            per_link = jnp.where(r == 0, per_link,
+                                 jnp.minimum(1.0, per_link))  # scale (r > 0)
+            # Each edge id hits exactly one link tile, so summing the
+            # masked broadcasts across tiles IS the gather.
+            return acc + jnp.sum(
+                jnp.where(onehot, per_link[0][None, None, :], 0.0), axis=2)
+
+        g = jax.lax.fori_loop(0, n_e_tiles, etile,
+                              jnp.zeros((bf, s), jnp.float32))    # (bf, S)
+        live = edges < e_tot - 1                  # trash never enters a min
+        m = jnp.min(jnp.where(live, g, jnp.inf), axis=1, keepdims=True)
+
+        @pl.when(r == 0)
+        def _round0():
+            adv_ref[rows] = m
+            d_ref[rows] = jnp.minimum(desired_ref[...], m)
+
+        @pl.when(r > 0)
+        def _refine():
+            d_ref[rows] = d_ref[rows] * jnp.where(jnp.isfinite(m), m, 0.0)
+
+        sent_ref[...] = d_ref[rows]
+        share_ref[...] = adv_ref[rows]
+
+
+@functools.partial(jax.jit, static_argnames=("e_tot", "fair_iters", "bf",
+                                             "be", "interpret"))
+def _pallas_waterfill(edges, w, desired, cap, *, e_tot: int, fair_iters: int,
+                      bf: int, be: int, interpret: bool):
+    f, s = edges.shape
+    fp = -(-max(f, 1) // bf) * bf
+    ep = -(-e_tot // be) * be
+    # Flow padding: trash edges + zero weight/desire = an exact no-op on
+    # every link sum and every min.  Link padding: capacity 1, no edge id
+    # ever points past e_tot - 1.
+    edges_p = jnp.full((fp, s), e_tot - 1, jnp.int32).at[:f].set(
+        edges.astype(jnp.int32))
+    w_p = jnp.zeros((fp, 1), jnp.float32).at[:f, 0].set(
+        w.astype(jnp.float32))
+    d_p = jnp.zeros((fp, 1), jnp.float32).at[:f, 0].set(
+        desired.astype(jnp.float32))
+    cap_p = jnp.ones((1, ep), jnp.float32).at[0, :e_tot].set(
+        cap.astype(jnp.float32))
+
+    flow_tile = lambda r, p, t: (t, 0)      # noqa: E731
+    sent, share = pl.pallas_call(
+        functools.partial(_waterfill_kernel, e_tot=e_tot, be=be,
+                          n_e_tiles=ep // be, bf=bf),
+        grid=(1 + fair_iters, 2, fp // bf),
+        in_specs=[
+            pl.BlockSpec((bf, s), flow_tile),
+            pl.BlockSpec((bf, 1), flow_tile),
+            pl.BlockSpec((bf, 1), flow_tile),
+            pl.BlockSpec((1, ep), lambda r, p, t: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bf, 1), flow_tile),
+            pl.BlockSpec((bf, 1), flow_tile),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((fp, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((fp, 1), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((1, ep), jnp.float32),
+                        pltpu.VMEM((fp, 1), jnp.float32),
+                        pltpu.VMEM((fp, 1), jnp.float32)],
+        interpret=interpret,
+    )(edges_p, w_p, d_p, cap_p)
+    return sent[:f, 0], share[:f, 0]
+
+
+def waterfill_step(edges: jnp.ndarray, w: jnp.ndarray, desired: jnp.ndarray,
+                   cap: jnp.ndarray, *, fair_iters: int = 2,
+                   backend: Optional[str] = None,
+                   interpret: Optional[bool] = None, bf: int = 128,
+                   be: int = 512) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One fused water-filling step: ``(sent, share)`` per flow.
+
+    ``edges`` is the (F, S) virtual-link layout (S = hop slots + NIC
+    slots; id ``cap.shape[0] - 1`` is the write-only trash slot), ``w``
+    the 0/1 flow weights, ``desired`` the requested rates and ``cap``
+    the link capacities, all in line-rate units.  ``backend=None`` picks
+    :func:`repro.kernels.kernel_backend`; semantics are defined by
+    :func:`repro.kernels.ref.waterfill_ref`.
+    """
+    backend = backend or kernel_backend()
+    if backend not in ("pallas", "ref"):
+        raise ValueError(f"unknown backend {backend!r}; "
+                         "choose 'pallas' or 'ref'")
+    if backend == "ref":
+        return ref.waterfill_ref(edges, w, desired, cap,
+                                 fair_iters=fair_iters)
+    return _pallas_waterfill(edges, w, desired, cap,
+                             e_tot=int(cap.shape[0]),
+                             fair_iters=int(fair_iters), bf=bf, be=be,
+                             interpret=interpret_default(interpret))

@@ -206,6 +206,8 @@ def test_host_device_runtime_degrades_and_errors():
 
 
 # ---- the 8-device case (subprocess: forced host devices) --------------------
+# steps=200 > horizon_chunk, so the batched while_loop (adaptive early
+# exit) runs UNDER shard_map and must still match the sequential engine.
 _PROG = textwrap.dedent("""
     from repro.experiments import Session, compare_results
     from repro.experiments.dist_sweep import dist_sweep
@@ -213,13 +215,15 @@ _PROG = textwrap.dedent("""
     assert jax.device_count() == 8, jax.device_count()
     grid = dict(topos=["clique(k=6)", "star(n=8)"],
                 routings=["ecmp(n=2)", "fatpaths(n_layers=3)"],
-                patterns=["uniform"], evaluators=["transport(steps=40)"],
+                patterns=["uniform"], evaluators=["transport(steps=200)"],
                 seeds=[0])
     seq = Session().sweep(**grid)
     s8 = Session()
     d8 = dist_sweep(s8, s8.grid(**grid), devices=8)
     diffs = compare_results(seq, d8)
     assert diffs == [], diffs[:5]
+    chunks = [r.meta["sweep_chunks"] for r in d8]
+    assert all(c < 200 // 64 for c in chunks), chunks   # early exit fired
     print("DIST8_OK")
 """)
 

@@ -111,6 +111,24 @@ def test_star_is_topology_free_baseline():
     assert st["p99"] <= st["p50"] * 3
 
 
+def test_empty_workload_simulates(setup):
+    """Regression: _virtual_links used to crash on ``wl.dst.max()`` for a
+    zero-flow workload; an empty cell must shape-probe and simulate to an
+    all-empty result instead."""
+    topo, lr, _ = setup
+    z = np.zeros(0)
+    wl = TR.FlowWorkload(src=z.astype(np.int32), dst=z.astype(np.int32),
+                         size=z, start=z,
+                         src_router=z.astype(np.int32),
+                         dst_router=z.astype(np.int32))
+    n_flows, e_tot, n_layers = TP.shape_signature(topo, lr, wl)
+    assert n_flows == 0 and e_tot > 0 and n_layers == lr.nh.shape[0]
+    res = TP.simulate(topo, lr, wl, TP.SimConfig(n_steps=40))
+    assert len(res.fct) == 0
+    assert res.fct_stats()["finished"] == 0.0
+    assert res.link_util_mean == 0.0
+
+
 def test_flowlet_rerolls_under_congestion(setup):
     """All-to-one incast: fatpaths' flowlet elasticity must keep finishing
     flows (re-rolling layers), even if slowly."""
