@@ -119,6 +119,18 @@ def main(quick: bool = False) -> None:
          f"steps=2000 seeds=4 fullhorizon_us={us_f.min_us:.0f} "
          f"speedup={us_f.min_us / us_e.min_us:.1f}")
 
+    # ---- open-loop dynamic traffic (CI-guarded): continuous Poisson
+    # arrivals and incast waves through the same fused adaptive scan;
+    # tracks the cost of the activation lane end to end -------------------
+    dyn_steps = 400 if quick else 1000
+    for key, pattern in (("poisson", "load(level=0.5,window=192)"),
+                         ("incast", "incast(fan_in=8,waves=4,wave_period=64)")):
+        wl_d = session.workload(SF, pattern, seed=2)
+        cfg_d = TP.SimConfig(n_steps=dyn_steps)
+        us = timeit(lambda: TP.simulate(topo, lr, wl_d, cfg_d), n=3, warmup=1)
+        emit(f"transport/openloop/{key}", us,
+             f"steps={dyn_steps} n_flows={wl_d.n_flows}")
+
 
 if __name__ == "__main__":
     main()

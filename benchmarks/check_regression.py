@@ -29,7 +29,7 @@ by a calibration key (default: the ``kernels/pathcount`` row — a plain
 jitted XLA matmul whose speed tracks the machine, not this repo's hot
 paths).  Recalibrating the baseline when hardware or a guarded
 workload deliberately changes:
-``python -m benchmarks.run --quick --json BENCH_PR4.json`` (see
+``python -m benchmarks.run --quick --json BENCH_PR6.json`` (see
 README "refreshing the bench baseline").
 
 Guarded:
@@ -43,6 +43,9 @@ Guarded:
                                   fused water-filling step body);
   * ``transport/earlyexit/…``   — 4-seed vmapped sweep at paper-default
                                   depth (the adaptive horizon's win);
+  * ``transport/openloop/…``    — dynamic-traffic cells (Poisson load,
+                                  incast waves) through the activation
+                                  lane of the fused scan;
   * ``sweep/dist/…``            — bench_sweep distributed-engine wall
                                   time for the whole quick grid (the
                                   scale keystone's contract).
@@ -58,7 +61,7 @@ import sys
 
 GUARDED = [r"^fig12/disjoint/", r"^transport/steptime/",
            r"^transport/fusedstep/", r"^transport/earlyexit/",
-           r"^sweep/dist/"]
+           r"^transport/openloop/", r"^sweep/dist/"]
 CALIBRATE = r"^kernels/pathcount/"
 
 

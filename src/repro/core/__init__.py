@@ -8,12 +8,13 @@ The paper's primary contribution as a composable JAX library:
 * :mod:`repro.core.layers`     — FatPaths layered routing (§5.2–5.4).
 * :mod:`repro.core.routing`    — forwarding functions + table accounting (§5.1, §5.5).
 * :mod:`repro.core.traffic`    — traffic patterns (§2.4).
+* :mod:`repro.core.arrivals`   — open-loop arrival processes (PR 6).
 * :mod:`repro.core.transport`  — flow-level purified-transport simulator (§7).
 * :mod:`repro.core.throughput` — MAT multicommodity-flow LP (§6.4).
 """
 
-from . import (diversity, layers, paths, routing, throughput, topology,  # noqa: F401
-               traffic, transport)
+from . import (arrivals, diversity, layers, paths, routing, throughput,  # noqa: F401
+               topology, traffic, transport)
 from .layers import LayeredRouting, build_layers  # noqa: F401
 from .routing import ForwardingFunction  # noqa: F401
 from .topology import Topology, by_name  # noqa: F401

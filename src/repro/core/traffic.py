@@ -75,12 +75,31 @@ def stencil2d(n: int, offsets: Tuple[int, ...] = (1, -1, 42, -42)) -> np.ndarray
     return np.stack([(np.arange(n) + c) % n for c in offsets])
 
 
-def all_to_one(n: int, seed: int = 0) -> np.ndarray:
+def all_to_one(n: int, seed: int = 0, acks: bool = False):
+    """Many-to-one incast onto a seeded victim endpoint.
+
+    ``acks=False`` (the PATTERNS-compatible default) returns the (n,)
+    destination map: everyone sends to the victim (the victim itself
+    sends to its neighbour so the map stays self-talk-free).
+
+    ``acks=True`` returns ``(src, dst, is_ack)`` arrays: the data flows
+    ``i -> victim`` for every ``i != victim`` PLUS the reverse ACK-path
+    flows ``victim -> i`` — the TCP-outcast scenario, where the victim's
+    ACK/response traffic shares the congested last hop in reverse and
+    per-sender fairness collapses.  ``is_ack`` marks the reverse flows.
+    """
     rng = np.random.default_rng(seed)
     tgt = int(rng.integers(n))
-    t = np.full(n, tgt)
-    t[tgt] = (tgt + 1) % n
-    return t
+    if not acks:
+        t = np.full(n, tgt)
+        t[tgt] = (tgt + 1) % n
+        return t
+    senders = np.setdiff1d(np.arange(n), [tgt])
+    src = np.concatenate([senders, np.full(len(senders), tgt)])
+    dst = np.concatenate([np.full(len(senders), tgt), senders])
+    is_ack = np.concatenate([np.zeros(len(senders), bool),
+                             np.ones(len(senders), bool)])
+    return src, dst, is_ack
 
 
 def adversarial(n: int, seed: int = 0) -> np.ndarray:
@@ -144,7 +163,16 @@ PATTERNS = {
 # ---- Flow workloads ----------------------------------------------------------
 @dataclasses.dataclass
 class FlowWorkload:
-    """A set of flows over endpoints: arrays indexed by flow id."""
+    """A set of flows over endpoints: arrays indexed by flow id.
+
+    ``active_step``/``is_ack`` are the open-loop dynamic-traffic lanes
+    (PR 6): when ``active_step`` is set, flow ``i`` only participates in
+    the transport scan from step ``active_step[i]`` on (arrivals built by
+    :mod:`repro.core.arrivals`); ``None`` keeps the closed-loop batch
+    semantics (everyone active from step 0).  ``is_ack`` marks reverse
+    ACK-path flows (see :func:`all_to_one` with ``acks=True``) so
+    evaluators can separate data goodput from ACK traffic.
+    """
 
     src: np.ndarray         # (F,) endpoint ids
     dst: np.ndarray         # (F,) endpoint ids
@@ -152,6 +180,8 @@ class FlowWorkload:
     start: np.ndarray       # (F,) seconds
     src_router: np.ndarray  # (F,)
     dst_router: np.ndarray  # (F,)
+    active_step: Optional[np.ndarray] = None  # (F,) int32 activation steps
+    is_ack: Optional[np.ndarray] = None       # (F,) bool reverse-ACK marker
 
     @property
     def n_flows(self) -> int:
@@ -162,7 +192,8 @@ def make_workload(topo: Topology, pattern: str = "permutation",
                   flow_size: float = 1 << 20, n_rounds: int = 1,
                   arrival_rate: float = 0.0, randomize: bool = True,
                   seed: int = 0, frac_endpoints: float = 1.0,
-                  size_spread: float = 0.0) -> FlowWorkload:
+                  size_spread: float = 0.0, acks: bool = False,
+                  ack_frac: float = 0.05) -> FlowWorkload:
     """Build a flow workload from a named pattern.
 
     Args:
@@ -175,11 +206,15 @@ def make_workload(topo: Topology, pattern: str = "permutation",
       randomize: apply §3.4 randomised endpoint mapping.
       frac_endpoints: fraction of communicating endpoints (§7.1.10).
       size_spread: lognormal sigma for flow sizes (0 => fixed size).
+      acks: ``alltoone`` only — also emit the victim's reverse ACK-path
+        flows (TCP-outcast scenario); marked in ``is_ack`` and sized at
+        ``ack_frac * flow_size``.
+      ack_frac: ACK flow size as a fraction of ``flow_size``.
     """
     rng = np.random.default_rng(seed)
     ep2r = endpoint_router_map(topo)
     n = len(ep2r)
-    srcs, dsts = [], []
+    srcs, dsts, ack_rows = [], [], []
     for r in range(n_rounds):
         if pattern == "stencil":
             st = stencil2d(n, offsets=(1, -1, 42 if n <= 10_000 else 1337,
@@ -187,6 +222,16 @@ def make_workload(topo: Topology, pattern: str = "permutation",
             for row in st:
                 srcs.append(np.arange(n))
                 dsts.append(row)
+                ack_rows.append(np.zeros(n, dtype=bool))
+            continue
+        if pattern == "alltoone" and acks:
+            s, d, a = all_to_one(n, seed=seed + r, acks=True)
+            if randomize:
+                relabel = np.random.default_rng(seed + 101 + r).permutation(n)
+                s, d = relabel[s], relabel[d]
+            srcs.append(s)
+            dsts.append(d)
+            ack_rows.append(a)
             continue
         if pattern == "worstcase":
             t = worst_case(topo, seed=seed + r)
@@ -202,18 +247,22 @@ def make_workload(topo: Topology, pattern: str = "permutation",
             t = randomized_mapping(t, seed=seed + 101 + r)
         srcs.append(np.arange(n))
         dsts.append(t)
+        ack_rows.append(np.zeros(n, dtype=bool))
     src = np.concatenate(srcs)
     dst = np.concatenate(dsts)
+    is_ack = np.concatenate(ack_rows)
     keep = src != dst
-    src, dst = src[keep], dst[keep]
+    src, dst, is_ack = src[keep], dst[keep], is_ack[keep]
     if frac_endpoints < 1.0:
         mask = rng.random(len(src)) < frac_endpoints
-        src, dst = src[mask], dst[mask]
+        src, dst, is_ack = src[mask], dst[mask], is_ack[mask]
     f = len(src)
     if size_spread > 0:
         size = flow_size * rng.lognormal(0.0, size_spread, size=f)
     else:
         size = np.full(f, float(flow_size))
+    if is_ack.any():
+        size = np.where(is_ack, size * float(ack_frac), size)
     if arrival_rate > 0:
         start = rng.exponential(1.0 / arrival_rate, size=f).cumsum()
         start = start * (f / max(start[-1], 1e-9)) / arrival_rate / f  # window
@@ -225,4 +274,5 @@ def make_workload(topo: Topology, pattern: str = "permutation",
         size=size.astype(np.float64), start=start.astype(np.float64),
         src_router=ep2r[src].astype(np.int32),
         dst_router=ep2r[dst].astype(np.int32),
+        is_ack=is_ack if is_ack.any() else None,
     )

@@ -50,6 +50,28 @@ Execution structure (PR 5):
   result-bearing state component, so early exit returns results
   bit-identical to the full-horizon run; cells whose flows stay active
   (slow but routable) run the full ``n_steps``.
+
+Dynamic traffic (PR 6) — the open-loop lane:
+
+* ``arrs["active_at"]`` is a per-flow activation *step* (int32 operand,
+  from :attr:`FlowWorkload.active_step`, built by
+  :mod:`repro.core.arrivals`): a flow participates only once
+  ``step >= active_at`` AND ``start <= t`` — with ``active_at = 0``
+  (the default for every static workload) the predicate reduces bitwise
+  to the old closed-loop one, so a dynamic cell whose activations are
+  all zero reproduces the static-batch result exactly;
+* ``state["depart_step"]`` records the step at which each flow finished
+  (-1 while in flight) — the departure half of the unrolled
+  flow-slot ring buffer (see :mod:`repro.core.arrivals`);
+* the adaptive horizon needs no extra predicate for pending arrivals: a
+  not-yet-active flow keeps ``remaining > 0``, and it is counted stuck
+  only if no pickable layer can EVER route it — in which case it sends
+  nothing after arriving either, so skipping it stays an exact no-op;
+* the masking of inactive flows' edges to the trash link moved INTO the
+  fused water-filling kernel (the ``active`` lane of
+  :func:`repro.kernels.waterfill.waterfill_step`), value-identical to
+  the host-side select it replaces — inactive flows still see share
+  = +inf (an uncongested network), which the tcp/dctcp ramp relies on.
 """
 
 from __future__ import annotations
@@ -103,6 +125,9 @@ class SimResult:
     finished: np.ndarray       # (F,) bool
     link_util_mean: float
     config: SimConfig
+    # (F,) step index at which each flow completed; -1 = still in flight
+    # at the horizon (the departure lane of the dynamic-traffic ring).
+    depart_step: Optional[np.ndarray] = None
 
     @property
     def throughput_per_flow(self) -> np.ndarray:
@@ -242,6 +267,15 @@ def _prepare(topo: Topology, routing: LayeredRouting, wl: FlowWorkload,
          jnp.broadcast_to(dst_e[None, :, None], (n_layers, n_flows, 1))],
         axis=2)
     usable = jnp.asarray(routing.reach)[:, src_r, dst_r].T   # (F, L)
+    # Dynamic-traffic activation lane: step index before which the flow
+    # does not exist.  Static workloads (active_step=None) get zeros —
+    # the activation predicate then reduces bitwise to the closed-loop
+    # ``start <= t`` one.
+    active_step = getattr(wl, "active_step", None)
+    if active_step is None:
+        active_at = jnp.zeros(n_flows, dtype=jnp.int32)
+    else:
+        active_at = jnp.asarray(active_step, dtype=jnp.int32)
     return dict(
         path_edges=path_edges,                         # (L, F, H+2)
         routed=routed,                                 # (L, F)
@@ -249,6 +283,7 @@ def _prepare(topo: Topology, routing: LayeredRouting, wl: FlowWorkload,
         usable=usable,
         size=jnp.asarray(wl.size, dtype=jnp.float32),
         start=jnp.asarray(wl.start, dtype=jnp.float32),
+        active_at=active_at,                           # (F,) int32
         e_tot=e_tot,
         n_layers=n_layers,
     )
@@ -322,13 +357,17 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
         remaining=arrs["size"],
         layer=layer0,
         rate=rate0,
-        fct=jnp.full(f, jnp.nan, dtype=jnp.float32),
         hops=jnp.zeros(f, dtype=jnp.float32),
         # Per-flow accumulators (elementwise, exact under flow padding);
         # the utilization ratio is taken on host AFTER stripping padding,
         # so batched and standalone runs report bit-identical metrics.
         sent_acc=jnp.zeros(f, dtype=jnp.float32),
         w_acc=jnp.zeros(f, dtype=jnp.float32),
+        # Departure lane: the step at which the flow finished (-1 = in
+        # flight).  Result-bearing AND exact under early exit: once all
+        # flows are done/stuck no step produces a newly_done, so skipped
+        # chunks cannot have written it.
+        depart_step=jnp.full(f, -1, dtype=jnp.int32),
     )
 
     cap = jnp.ones(e_tot, dtype=jnp.float32)           # capacities in line units
@@ -360,7 +399,11 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
         else:
             i = xs
         t = i.astype(jnp.float32) * cfg.dt
-        started = arrs["start"] <= t
+        # Open-loop activation: a flow exists once its activation step
+        # has been reached AND its start time has passed.  Static cells
+        # have active_at == 0 everywhere, reducing this bitwise to the
+        # closed-loop ``start <= t`` predicate.
+        started = (arrs["start"] <= t) & (i >= arrs["active_at"])
         done = state["remaining"] <= 0
         active = started & ~done
 
@@ -371,25 +414,28 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
         routed = g[:, n_slots] > 0
         n_hops = g[:, n_slots + 1].astype(jnp.float32)
         send = active & routed
-        all_edges = jnp.where(send[:, None],
-                              jnp.where(edges < 0, e_tot - 1, edges),
-                              e_tot - 1)
 
         # --- fused max-min water-filling (feasible by construction) -------
+        # The active lane masks non-sending rows to the trash link inside
+        # the kernel (value-identical to the host-side select it replaced).
         w = send.astype(jnp.float32)
         desired = jnp.minimum(state["rate"], 1.0) * w
-        sent, share = waterfill_step(all_edges, w, desired, cap,
+        sent, share = waterfill_step(edges, w, desired, cap, active=send,
                                      fair_iters=cfg.fair_iters,
                                      backend=cfg.kernel_backend or None)
 
         delivered = sent * line_bytes
         new_remaining = jnp.maximum(state["remaining"] - delivered * w, 0.0)
         newly_done = (new_remaining <= 0) & ~done & started
-        # FCT includes propagation + software latency along the path taken.
-        fct_now = (t + cfg.dt - arrs["start"]
-                   + n_hops * cfg.link_latency + cfg.sw_latency)
-        fct = jnp.where(newly_done, fct_now, state["fct"])
+        # FCT is NOT accumulated in-scan: it is derived on the host from
+        # the integer depart/hops lanes (:func:`_to_result`).  A float
+        # chain like ``t + dt - start + ...`` is fair game for XLA to
+        # regroup, and batched vs standalone compilations regrouped it
+        # DIFFERENTLY once ``start`` was nonzero (dynamic traffic) —
+        # a 1-ulp engine divergence.  Integer lanes can't regroup.
         hops = jnp.where(newly_done, n_hops, state["hops"])
+        depart = jnp.where(newly_done, i.astype(jnp.int32),
+                           state["depart_step"])
 
         # --- transport rate dynamics --------------------------------------
         if cfg.transport == "ndp":
@@ -414,9 +460,9 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
         else:
             layer = state["layer"]
 
-        out = dict(remaining=new_remaining, layer=layer, rate=rate, fct=fct,
+        out = dict(remaining=new_remaining, layer=layer, rate=rate,
                    hops=hops, sent_acc=state["sent_acc"] + sent,
-                   w_acc=state["w_acc"] + w)
+                   w_acc=state["w_acc"] + w, depart_step=depart)
         return out, None
 
     def run_chunk(state, c, length: int):
@@ -432,6 +478,10 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
         return state
 
     def exhausted(state):
+        # Pending arrivals block early exit for free: a flow whose
+        # active_at lies ahead still has remaining > 0, and it only
+        # counts as stuck if NO pickable layer can ever route it — in
+        # which case it would send nothing after activating either.
         routed_cur = arrs["routed"][state["layer"], frows]
         stuck = ~routed_cur & ~pick_routable
         return jnp.all((state["remaining"] <= 0.0) | stuck)
@@ -480,7 +530,8 @@ def _run_scan_batch(arrs, keys, cfg: SimConfig,
     return jax.vmap(lambda k: _run_scan_impl(arrs, k, cfg, static))(keys)
 
 
-def _to_result(size: np.ndarray, final, cfg: SimConfig) -> SimResult:
+def _to_result(size: np.ndarray, final, cfg: SimConfig,
+               start: Optional[np.ndarray] = None) -> SimResult:
     remaining = np.asarray(final["remaining"])
     # Flow-time-weighted achieved-rate fraction: total line-rate fraction
     # actually sent over total demanded.  Host-side float64 over the
@@ -488,13 +539,29 @@ def _to_result(size: np.ndarray, final, cfg: SimConfig) -> SimResult:
     # cell ran standalone or inside a padded batch.
     sent = float(np.asarray(final["sent_acc"], dtype=np.float64).sum())
     want = float(np.asarray(final["w_acc"], dtype=np.float64).sum())
+    # FCT from the integer depart lane, on host with a FIXED numpy op
+    # order (left-to-right, no FMA): completion time (the step after the
+    # departing step's clock tick) minus start, plus propagation and
+    # software latency over the path taken at completion.  Deriving this
+    # from integer state is what makes dynamic cells' FCTs bit-identical
+    # between the sequential and distributed engines — see the step
+    # body's comment.
+    dep = np.asarray(final["depart_step"])
+    hops = np.asarray(final["hops"])
+    f32 = np.float32
+    start32 = (np.zeros(dep.shape, np.float32) if start is None
+               else np.asarray(start, np.float32))
+    fct = ((dep.astype(np.float32) + f32(1.0)) * f32(cfg.dt) - start32
+           + hops * f32(cfg.link_latency) + f32(cfg.sw_latency))
+    fct = np.where(dep >= 0, fct, np.float32(np.nan))
     return SimResult(
-        fct=np.asarray(final["fct"]),
+        fct=fct,
         delivered=size - remaining,
         size=size,
         finished=remaining <= 0,
         link_util_mean=sent / max(want, 1.0),
         config=cfg,
+        depart_step=dep,
     )
 
 
@@ -519,7 +586,8 @@ def pad_prepared(arrs, static, *, n_flows: int, n_edges: int,
 
     Exactness argument (each padding axis):
 
-    * flows (F): padded flows have ``start=inf`` (never started), size 0,
+    * flows (F): padded flows have ``start=inf`` and ``active_at`` =
+      INT32_MAX (never started, never activated), size 0,
       ``usable``/``routed`` False — their water-filling weight is 0.0, an
       exact no-op on every shared-link sum, and the per-flow randomness
       is ``fold_in``-keyed by flow index so real flows' draws are
@@ -554,21 +622,27 @@ def pad_prepared(arrs, static, *, n_flows: int, n_edges: int,
         usable=padf(arrs["usable"], False, 0),
         size=padf(arrs["size"], 0.0, 0),
         start=padf(arrs["start"], jnp.inf, 0),
+        active_at=padf(arrs["active_at"], np.iinfo(np.int32).max, 0),
     )
     return out, (int(n_edges), n_layers, n_steps)
 
 
 def batch_result(size: np.ndarray, final, cfg: SimConfig,
-                 n_flows: Optional[int] = None) -> SimResult:
+                 n_flows: Optional[int] = None,
+                 start: Optional[np.ndarray] = None) -> SimResult:
     """One element of a batched scan output -> :class:`SimResult`,
-    stripping flow padding (``n_flows`` = the cell's real flow count)."""
-    per_flow = ("remaining", "layer", "rate", "fct", "hops",
-                "sent_acc", "w_acc")
+    stripping flow padding (``n_flows`` = the cell's real flow count).
+    ``start`` is the cell's (unpadded) flow start times; omit for
+    all-start-at-zero workloads."""
+    per_flow = ("remaining", "layer", "rate", "hops",
+                "sent_acc", "w_acc", "depart_step")
     if n_flows is not None:
         final = {k: (v[:n_flows] if k in per_flow else v)
                  for k, v in final.items()}
         size = size[:n_flows]
-    return _to_result(np.asarray(size), final, cfg)
+        if start is not None:
+            start = np.asarray(start)[:n_flows]
+    return _to_result(np.asarray(size), final, cfg, start=start)
 
 
 def simulate(topo: Topology, routing: LayeredRouting, wl: FlowWorkload,
@@ -580,7 +654,8 @@ def simulate(topo: Topology, routing: LayeredRouting, wl: FlowWorkload,
     # every sweep seed recompiles a byte-identical scan.
     cfg0 = dataclasses.replace(cfg, seed=0)
     final = _run_scan(jarrs, jax.random.PRNGKey(cfg.seed), cfg0, static)
-    return _to_result(np.asarray(jarrs["size"]), final, cfg)
+    return _to_result(np.asarray(jarrs["size"]), final, cfg,
+                      start=np.asarray(jarrs["start"]))
 
 
 def simulate_seeds(topo: Topology, routing: LayeredRouting, wl: FlowWorkload,
@@ -598,8 +673,9 @@ def simulate_seeds(topo: Topology, routing: LayeredRouting, wl: FlowWorkload,
     finals = _run_scan_batch(jarrs, keys, dataclasses.replace(cfg, seed=0),
                              static)
     size = np.asarray(jarrs["size"])
+    start = np.asarray(jarrs["start"])
     return [
         _to_result(size, {k: v[i] for k, v in finals.items()},
-                   dataclasses.replace(cfg, seed=s))
+                   dataclasses.replace(cfg, seed=s), start=start)
         for i, s in enumerate(seeds)
     ]

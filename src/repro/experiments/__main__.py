@@ -133,6 +133,9 @@ def cmd_list(_args) -> int:
             defaults = ", ".join(f"{k}={v!r}"
                                  for k, v in sorted(reg.defaults(name).items()))
             print(f"  {name}({defaults})")
+            doc = reg.doc(name)
+            if doc:
+                print(f"      {doc}")
     return 0
 
 

@@ -31,6 +31,7 @@ from typing import Any, Callable, Dict, Tuple
 
 import numpy as np
 
+from ..core import arrivals
 from ..core import routing as routing_mod
 from ..core import topology as topo_mod
 from ..core.layers import LayeredRouting, build_layers
@@ -43,7 +44,7 @@ from .specs import Spec, SpecError, SpecLike
 
 __all__ = ["TOPOLOGIES", "ROUTINGS", "TRAFFIC", "EVALUATORS",
            "RoutingBundle", "RoutingCtx", "topo_spec", "transport_plan",
-           "fct_metrics"]
+           "transport_meta", "fct_metrics"]
 
 TOPOLOGIES = Registry("topology")
 ROUTINGS = Registry("routing scheme")
@@ -185,29 +186,39 @@ def _minimal(ctx: RoutingCtx, n_layers) -> RoutingBundle:
 # -----------------------------------------------------------------------------
 # Traffic patterns.
 # -----------------------------------------------------------------------------
-def _register_workload(name: str, **overrides):
+def _register_workload(name: str, doc: str = "", **overrides):
     defaults = dict(rounds=1, flow_size=float(1 << 20), randomize=True,
                     frac=1.0, spread=0.0, arrival=0.0)
     defaults.update(overrides)
 
     @TRAFFIC.register(name, **defaults)
     def _build(topo, seed, rounds, flow_size, randomize, frac, spread,
-               arrival, _name=name) -> FlowWorkload:
+               arrival, _name=name, **kw) -> FlowWorkload:
         return make_workload(topo, _name, flow_size=flow_size,
                              n_rounds=int(rounds), arrival_rate=arrival,
                              randomize=bool(randomize), seed=seed,
-                             frac_endpoints=frac, size_spread=spread)
+                             frac_endpoints=frac, size_spread=spread, **kw)
+
+    if doc:
+        _build.__doc__ = doc
 
 
-_register_workload("uniform")
-_register_workload("permutation")
-_register_workload("offdiag")
-_register_workload("shuffle")
-_register_workload("alltoone")
+_register_workload("uniform", doc="random uniform destinations (§2.4.1)")
+_register_workload("permutation", doc="random permutation / derangement "
+                                      "(§2.4.2)")
+_register_workload("offdiag", doc="off-diagonal shift pattern (§2.4.3)")
+_register_workload("shuffle", doc="bit-rotation shuffle pattern (§2.4.4)")
+_register_workload("alltoone", acks=0, ack_frac=0.05,
+                   doc="incast onto one victim endpoint; acks=1 adds the "
+                       "reverse ACK-path flows (TCP outcast)")
 # The paper's skew cases run un-randomized (§3.4 is the mitigation):
-_register_workload("adversarial", rounds=2, randomize=False)
-_register_workload("stencil", randomize=False)
-_register_workload("worstcase", randomize=False)
+_register_workload("adversarial", rounds=2, randomize=False,
+                   doc="skewed off-diagonal maximising colliding router "
+                       "pairs (§2.4.6)")
+_register_workload("stencil", randomize=False,
+                   doc="4-point stencil as four off-diagonals (§2.4.5)")
+_register_workload("worstcase", randomize=False,
+                   doc="assignment-maximised path lengths (§2.4.7)")
 
 
 @TRAFFIC.register("collide", rounds=4, flow_size=float(4 << 20))
@@ -241,6 +252,131 @@ def _collide(topo, seed, rounds, flow_size) -> FlowWorkload:
         start=np.zeros(len(src)),
         src_router=ep2r[src].astype(np.int32),
         dst_router=ep2r[dst].astype(np.int32))
+
+
+# -----------------------------------------------------------------------------
+# Open-loop dynamic traffic (PR 6): continuous arrivals, incast waves,
+# anycast placement.  All activation steps come from repro.core.arrivals
+# (deterministic in (key, flow); prefix-stable — see that module's
+# docstring), so both sweep engines derive identical workloads.
+# -----------------------------------------------------------------------------
+@TRAFFIC.register("load", level=0.5, pattern="uniform",
+                  flow_size=float(256 << 10), window=256, process="poisson",
+                  shape=1.5, bound=64.0, dt=10e-6, line_rate=12.5e9,
+                  samples=32)
+def _load(topo, seed, level, pattern, flow_size, window, process, shape,
+          bound, dt, line_rate, samples) -> FlowWorkload:
+    """Open-loop stream offering ``level`` x bisection bandwidth over a
+    ``window``-step arrival window (endpoint pairs drawn from ``pattern``;
+    interarrivals from ``process`` = poisson | pareto)."""
+    import jax
+
+    level = float(level)
+    if not 0.0 < level:
+        raise SpecError(f"load level must be > 0 (got {level})")
+    bisect = arrivals.bisection_bandwidth(topo, line_rate=float(line_rate),
+                                          samples=int(samples))
+    rate = level * bisect * float(dt) / float(flow_size)  # flows per step
+    n = max(1, int(round(rate * int(window))))
+    rounds = max(1, -(-n // max(1, topo.n_endpoints)))
+    base = make_workload(topo, str(pattern), flow_size=float(flow_size),
+                         n_rounds=rounds, randomize=True, seed=seed)
+    idx = np.arange(n) % base.n_flows
+    steps = arrivals.activation_steps(
+        jax.random.PRNGKey(int(seed)), n, rate=rate, process=str(process),
+        shape=float(shape), bound=float(bound))
+    return FlowWorkload(
+        src=base.src[idx], dst=base.dst[idx], size=base.size[idx],
+        start=arrivals.activation_starts(steps, float(dt)),
+        src_router=base.src_router[idx], dst_router=base.dst_router[idx],
+        active_step=steps)
+
+
+@TRAFFIC.register("incast", fan_in=8, waves=4, wave_period=64,
+                  flow_size=float(256 << 10), acks=1, ack_frac=0.05,
+                  dt=10e-6)
+def _incast(topo, seed, fan_in, waves, wave_period, flow_size, acks,
+            ack_frac, dt) -> FlowWorkload:
+    """Synchronized incast waves: ``fan_in`` seeded senders fire at one
+    victim every ``wave_period`` steps; acks=1 adds the victim's reverse
+    ACK-path flows (the outcast evaluator's workload)."""
+    ep2r = endpoint_router_map(topo)
+    n = len(ep2r)
+    rng = np.random.default_rng(seed)
+    victim = int(rng.integers(n))
+    others = np.setdiff1d(np.arange(n), [victim])
+    fan_in = min(int(fan_in), len(others))
+    senders = np.concatenate([
+        np.random.default_rng(seed + 7 * w + 1).choice(
+            others, size=fan_in, replace=False)
+        for w in range(max(1, int(waves)))])
+    sched = arrivals.incast_schedule(len(senders), fan_in, int(wave_period))
+    src, dst, step = senders, np.full(len(senders), victim), sched
+    is_ack = np.zeros(len(senders), dtype=bool)
+    if acks:
+        src = np.concatenate([src, dst])
+        dst = np.concatenate([dst, senders])
+        step = np.concatenate([step, sched])
+        is_ack = np.concatenate([is_ack, np.ones(len(senders), dtype=bool)])
+    size = np.where(is_ack, float(flow_size) * float(ack_frac),
+                    float(flow_size))
+    step = step.astype(np.int32)
+    return FlowWorkload(
+        src=src.astype(np.int32), dst=dst.astype(np.int32),
+        size=size.astype(np.float64),
+        start=arrivals.activation_starts(step, float(dt)),
+        src_router=ep2r[src].astype(np.int32),
+        dst_router=ep2r[dst].astype(np.int32),
+        active_step=step, is_ack=is_ack)
+
+
+@TRAFFIC.register("anycast", replicas=4, policy="closest",
+                  flow_size=float(256 << 10), window=128, process="poisson",
+                  shape=1.5, bound=64.0, dt=10e-6)
+def _anycast(topo, seed, replicas, policy, flow_size, window, process,
+             shape, bound, dt) -> FlowWorkload:
+    """Anycast service placement: every client resolves to one of
+    ``replicas`` seeded replica endpoints via the batched min-plus router
+    distance table (policy = closest | farthest); window > 0 makes the
+    request stream open-loop."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..core import paths as paths_mod
+
+    ep2r = endpoint_router_map(topo)
+    n = len(ep2r)
+    if n < 2:
+        raise SpecError(f"anycast needs >= 2 endpoints on {topo.name}")
+    rng = np.random.default_rng(seed)
+    reps = np.sort(rng.choice(n, size=min(int(replicas), n - 1),
+                              replace=False))
+    clients = np.setdiff1d(np.arange(n), reps)
+    dist = np.asarray(paths_mod.shortest_path_lengths(
+        jnp.asarray(np.asarray(topo.adj, bool)), max_l=16))
+    d = dist[ep2r[clients][:, None], ep2r[reps][None, :]]
+    if policy == "closest":
+        pick = np.argmin(d, axis=1)
+    elif policy == "farthest":
+        pick = np.argmax(d, axis=1)
+    else:
+        raise SpecError(f"unknown anycast policy {policy!r}; "
+                        "choose 'closest' or 'farthest'")
+    src, dst = clients, reps[pick]
+    f = len(src)
+    if int(window) > 0:
+        steps = arrivals.activation_steps(
+            jax.random.PRNGKey(int(seed)), f, rate=f / float(int(window)),
+            process=str(process), shape=float(shape), bound=float(bound))
+    else:
+        steps = np.zeros(f, dtype=np.int32)
+    return FlowWorkload(
+        src=src.astype(np.int32), dst=dst.astype(np.int32),
+        size=np.full(f, float(flow_size)),
+        start=arrivals.activation_starts(steps, float(dt)),
+        src_router=ep2r[src].astype(np.int32),
+        dst_router=ep2r[dst].astype(np.int32),
+        active_step=steps)
 
 
 # -----------------------------------------------------------------------------
@@ -291,6 +427,21 @@ def transport_plan(cell, steps, transport, seeds, dt, flowlet_gap,
     return cfg, sim_seeds
 
 
+def transport_meta(cell, cfg, sim_seeds) -> Dict[str, Any]:
+    """RunResult meta for a transport-family cell.  Shared by the
+    in-process evaluators and :mod:`repro.experiments.dist_sweep` — both
+    engines MUST assemble this identically or the engine-identity diff
+    fails on meta.  Dynamic (open-loop) workloads additionally record
+    their offered byte rate (host float64 — engine-independent)."""
+    meta = {"n_seeds": len(sim_seeds), "transport": cfg.transport,
+            "balancing": cell.bundle.balancing}
+    wl = cell.workload
+    if getattr(wl, "active_step", None) is not None:
+        meta["offered_gbs"] = arrivals.offered_gbs(wl.size, wl.active_step,
+                                                   cfg.dt)
+    return meta
+
+
 @EVALUATORS.register("transport", steps=2000, transport="ndp", seeds=1,
                      dt=10e-6, flowlet_gap=50e-6, adaptive=1, chunk=64)
 def _transport(session, cell, steps, transport, seeds, dt, flowlet_gap,
@@ -301,9 +452,43 @@ def _transport(session, cell, steps, transport, seeds, dt, flowlet_gap,
                                     flowlet_gap, adaptive, chunk)
     sims = simulate_seeds(cell.topo, cell.bundle.routing, cell.workload,
                           cfg, sim_seeds)
-    meta = {"n_seeds": len(sim_seeds), "transport": transport,
-            "balancing": cell.bundle.balancing}
-    return _fct_metrics(sims), meta
+    return _fct_metrics(sims), transport_meta(cell, cfg, sim_seeds)
+
+
+@EVALUATORS.register("outcast", steps=2000, transport="ndp", seeds=1,
+                     dt=10e-6, flowlet_gap=50e-6, adaptive=1, chunk=64)
+def _outcast(session, cell, steps, transport, seeds, dt, flowlet_gap,
+             adaptive, chunk) -> Tuple[Dict[str, float], Dict[str, Any]]:
+    """Outcast fairness under incast: the standard FCT metrics plus the
+    Jain fairness index over per-victim-flow goodput and the p99/p50 FCT
+    tail ratio, measured over the data flows into the modal destination
+    (ACK-path flows excluded)."""
+    cfg, sim_seeds = transport_plan(cell, steps, transport, seeds, dt,
+                                    flowlet_gap, adaptive, chunk)
+    sims = simulate_seeds(cell.topo, cell.bundle.routing, cell.workload,
+                          cfg, sim_seeds)
+    wl = cell.workload
+    dsts, counts = np.unique(wl.dst, return_counts=True)
+    victim = int(dsts[np.argmax(counts)])
+    data = wl.dst == victim
+    if getattr(wl, "is_ack", None) is not None:
+        data &= ~wl.is_ack
+    horizon_s = cfg.n_steps * cfg.dt
+    goodput, fcts = [], []
+    for r in sims:
+        elapsed = np.where(r.finished, np.maximum(r.fct, cfg.dt),
+                           np.maximum(horizon_s - wl.start, cfg.dt))
+        goodput.append((r.delivered / elapsed)[data])
+        fcts.append(r.fct[data & r.finished])
+    g = np.concatenate(goodput)
+    fct = np.concatenate(fcts)
+    jain = float(g.sum() ** 2 / (len(g) * (g ** 2).sum())) \
+        if g.size and (g ** 2).sum() > 0 else float("nan")
+    tail = float(np.quantile(fct, 0.99) / max(np.quantile(fct, 0.50), 1e-12)) \
+        if fct.size else float("nan")
+    metrics = dict(_fct_metrics(sims), jain_goodput=jain,
+                   fct_p99_over_p50=tail, victim_flows=float(data.sum()))
+    return metrics, transport_meta(cell, cfg, sim_seeds)
 
 
 #: public alias — dist_sweep assembles the same record from batched sims.

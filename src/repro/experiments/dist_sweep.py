@@ -65,7 +65,7 @@ import numpy as np
 from ..ckpt.sweep import SweepCheckpoint
 from ..core import transport as transport_mod
 from ..dist.sharding import P, Runtime, host_device_runtime
-from .catalog import EVALUATORS, fct_metrics, transport_plan
+from .catalog import EVALUATORS, fct_metrics, transport_meta, transport_plan
 from .results import RunResult, order_results
 from .session import ResolvedCell, Session
 from .specs import ExperimentSpec
@@ -92,6 +92,7 @@ class _Work:
     post: Dict[str, float]
     resolve_s: float
     size: Any = None             # (F,) float32, filled at dispatch
+    start: Any = None            # (F,) float32 flow start times, ditto
 
 
 def _ceil_pow2(n: int) -> int:
@@ -208,6 +209,7 @@ def _dispatch_bucket(works: List[_Work], rt: Runtime, bucket_index: int):
         arrs, static = transport_mod.prepare(
             w.cell.topo, w.cell.bundle.routing, w.cell.workload, w.cfg)
         w.size = np.asarray(arrs["size"])
+        w.start = np.asarray(arrs["start"])
         prepared.append((arrs, static))
     n_flows = max(w.n_flows for w in works)
     n_edges = max(w.e_tot for w in works)
@@ -301,7 +303,8 @@ def _finalize_bucket(works: List[_Work], finals, elements
         w = works[wi]
         sims[wi].append(transport_mod.batch_result(
             w.size, {k: v[i] for k, v in finals.items()},
-            dataclasses.replace(w.cfg, seed=s), n_flows=w.n_flows))
+            dataclasses.replace(w.cfg, seed=s), n_flows=w.n_flows,
+            start=w.start))
         chunks[wi] = max(chunks[wi], int(finals["horizon_chunks"][i]))
     return sims, chunks
 
@@ -358,9 +361,7 @@ def dist_sweep(session: Session, cells: List[ExperimentSpec], *,
         batched.append(_Work(
             spec=spec, cell=cell, cfg=cfg, sim_seeds=sim_seeds,
             n_flows=n_flows, e_tot=e_tot, n_layers=n_layers,
-            ev_meta={"n_seeds": len(sim_seeds),
-                     "transport": cfg.transport,
-                     "balancing": cell.bundle.balancing},
+            ev_meta=transport_meta(cell, cfg, sim_seeds),
             pre=pre, post=session.stats_snapshot(),
             resolve_s=time.perf_counter() - t0))
     if n_resumed:

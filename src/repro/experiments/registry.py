@@ -41,6 +41,12 @@ class Registry:
     def defaults(self, name: str) -> Dict[str, Any]:
         return dict(self._entries[name][1])
 
+    def doc(self, name: str) -> str:
+        """First line of the builder's docstring ('' if undocumented) —
+        the one-line description ``experiments list`` prints."""
+        d = self._entries[name][0].__doc__ or ""
+        return d.strip().splitlines()[0].strip() if d.strip() else ""
+
     def resolve(self, spec: SpecLike) -> Tuple[Callable, Dict[str, Any]]:
         """Spec -> (builder, merged kwargs); validates name + parameters."""
         spec = Spec.coerce(spec)

@@ -60,7 +60,8 @@ def semiring_matmul_ref(a: jnp.ndarray, b: jnp.ndarray,
 
 
 def waterfill_ref(edges: jnp.ndarray, w: jnp.ndarray, desired: jnp.ndarray,
-                  cap: jnp.ndarray, fair_iters: int = 2):
+                  cap: jnp.ndarray, fair_iters: int = 2,
+                  active: Optional[jnp.ndarray] = None):
     """Oracle for :func:`repro.kernels.waterfill.waterfill_step`.
 
     One max-min water-filling transport step over virtual links:
@@ -70,7 +71,16 @@ def waterfill_ref(edges: jnp.ndarray, w: jnp.ndarray, desired: jnp.ndarray,
       and padding point there; it is excluded from every min);
     * ``w`` (F,) — flow weights (1 = sends this step, 0 = inert);
     * ``desired`` (F,) — requested rate in line units;
-    * ``cap`` (E,) — link capacities in line units.
+    * ``cap`` (E,) — link capacities in line units;
+    * ``active`` (F,) bool, optional — the dynamic-traffic lane: rows
+      with ``active=False`` have their edges mapped to the trash slot
+      and weight/desire zeroed INSIDE the step (so do rows whose edge
+      id is the -1 walk padding).  This reproduces exactly what callers
+      used to do host-side (select edges to trash for inactive flows)
+      and keeps their fair share at +inf — an inactive flow sees an
+      uncongested network, which the tcp/dctcp rate dynamics rely on.
+      ``active=None`` means all rows are active and edge ids are taken
+      as-is (the pre-dynamic-lane contract).
 
     Returns ``(sent, share)``: the achieved rate after ``fair_iters``
     feasibility refinements (never oversubscribing any link), and the
@@ -78,6 +88,11 @@ def waterfill_ref(edges: jnp.ndarray, w: jnp.ndarray, desired: jnp.ndarray,
     """
     e_tot = cap.shape[0]
     w = w.astype(jnp.float32)
+    if active is not None:
+        actf = active.astype(jnp.float32)
+        edges = jnp.where(active[:, None] & (edges >= 0), edges, e_tot - 1)
+        w = w * actf
+        desired = desired * actf
     live = edges < e_tot - 1
     count = jnp.zeros(e_tot, jnp.float32).at[edges].add(
         jnp.broadcast_to(w[:, None], edges.shape))

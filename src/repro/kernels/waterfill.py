@@ -52,13 +52,20 @@ from . import interpret_default, kernel_backend, ref
 __all__ = ["waterfill_step"]
 
 
-def _waterfill_kernel(edges_ref, w_ref, desired_ref, cap_ref, sent_ref,
-                      share_ref, load_ref, d_ref, adv_ref, *, e_tot: int,
-                      be: int, n_e_tiles: int, bf: int):
+def _waterfill_kernel(edges_ref, w_ref, desired_ref, active_ref, cap_ref,
+                      sent_ref, share_ref, load_ref, d_ref, adv_ref, *,
+                      e_tot: int, be: int, n_e_tiles: int, bf: int):
     r = pl.program_id(0)          # water-filling round (0 = fair share)
     p = pl.program_id(1)          # 0 = scatter loads, 1 = reduce per flow
     t = pl.program_id(2)          # flow tile
+    # Dynamic-traffic active lane, fused into the step: inactive rows
+    # (and -1 walk-padding slots) collapse to the write-only trash link,
+    # and their weight/desire is zeroed — the same masking transport
+    # callers used to materialise host-side, now free inside the kernel.
+    act = active_ref[...] > 0.0                              # (bf, 1) bool
+    actf = act.astype(jnp.float32)
     edges = edges_ref[...]                                   # (bf, S) int32
+    edges = jnp.where(act & (edges >= 0), edges, e_tot - 1)
     _, s = edges.shape
     # ALL cross-round/cross-tile state lives in VMEM scratch (load_ref:
     # link loads; d_ref/adv_ref: per-flow demand and fair share).  The
@@ -77,7 +84,7 @@ def _waterfill_kernel(edges_ref, w_ref, desired_ref, cap_ref, sent_ref,
 
         # Round 0 claims with the flow weight; later rounds re-scatter the
         # provisional demand scratch (written by round r-1's reduce phase).
-        val = jnp.where(r == 0, w_ref[...], d_ref[rows])     # (bf, 1)
+        val = jnp.where(r == 0, w_ref[...] * actf, d_ref[rows])  # (bf, 1)
 
         def etile(ei, _):
             ids = ei * be + jax.lax.broadcasted_iota(jnp.int32, (1, 1, be), 2)
@@ -113,7 +120,7 @@ def _waterfill_kernel(edges_ref, w_ref, desired_ref, cap_ref, sent_ref,
         @pl.when(r == 0)
         def _round0():
             adv_ref[rows] = m
-            d_ref[rows] = jnp.minimum(desired_ref[...], m)
+            d_ref[rows] = jnp.minimum(desired_ref[...] * actf, m)
 
         @pl.when(r > 0)
         def _refine():
@@ -125,20 +132,23 @@ def _waterfill_kernel(edges_ref, w_ref, desired_ref, cap_ref, sent_ref,
 
 @functools.partial(jax.jit, static_argnames=("e_tot", "fair_iters", "bf",
                                              "be", "interpret"))
-def _pallas_waterfill(edges, w, desired, cap, *, e_tot: int, fair_iters: int,
-                      bf: int, be: int, interpret: bool):
+def _pallas_waterfill(edges, w, desired, active, cap, *, e_tot: int,
+                      fair_iters: int, bf: int, be: int, interpret: bool):
     f, s = edges.shape
     fp = -(-max(f, 1) // bf) * bf
     ep = -(-e_tot // be) * be
-    # Flow padding: trash edges + zero weight/desire = an exact no-op on
-    # every link sum and every min.  Link padding: capacity 1, no edge id
-    # ever points past e_tot - 1.
+    # Flow padding: inactive rows (the kernel's active lane maps their
+    # edges to trash and zeroes weight/desire) = an exact no-op on every
+    # link sum and every min.  Link padding: capacity 1, no edge id ever
+    # points past e_tot - 1.
     edges_p = jnp.full((fp, s), e_tot - 1, jnp.int32).at[:f].set(
         edges.astype(jnp.int32))
     w_p = jnp.zeros((fp, 1), jnp.float32).at[:f, 0].set(
         w.astype(jnp.float32))
     d_p = jnp.zeros((fp, 1), jnp.float32).at[:f, 0].set(
         desired.astype(jnp.float32))
+    act_p = jnp.zeros((fp, 1), jnp.float32).at[:f, 0].set(
+        active.astype(jnp.float32))
     cap_p = jnp.ones((1, ep), jnp.float32).at[0, :e_tot].set(
         cap.astype(jnp.float32))
 
@@ -149,6 +159,7 @@ def _pallas_waterfill(edges, w, desired, cap, *, e_tot: int, fair_iters: int,
         grid=(1 + fair_iters, 2, fp // bf),
         in_specs=[
             pl.BlockSpec((bf, s), flow_tile),
+            pl.BlockSpec((bf, 1), flow_tile),
             pl.BlockSpec((bf, 1), flow_tile),
             pl.BlockSpec((bf, 1), flow_tile),
             pl.BlockSpec((1, ep), lambda r, p, t: (0, 0)),
@@ -163,13 +174,13 @@ def _pallas_waterfill(edges, w, desired, cap, *, e_tot: int, fair_iters: int,
                         pltpu.VMEM((fp, 1), jnp.float32),
                         pltpu.VMEM((fp, 1), jnp.float32)],
         interpret=interpret,
-    )(edges_p, w_p, d_p, cap_p)
+    )(edges_p, w_p, d_p, act_p, cap_p)
     return sent[:f, 0], share[:f, 0]
 
 
 def waterfill_step(edges: jnp.ndarray, w: jnp.ndarray, desired: jnp.ndarray,
-                   cap: jnp.ndarray, *, fair_iters: int = 2,
-                   backend: Optional[str] = None,
+                   cap: jnp.ndarray, *, active: Optional[jnp.ndarray] = None,
+                   fair_iters: int = 2, backend: Optional[str] = None,
                    interpret: Optional[bool] = None, bf: int = 128,
                    be: int = 512) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One fused water-filling step: ``(sent, share)`` per flow.
@@ -177,7 +188,12 @@ def waterfill_step(edges: jnp.ndarray, w: jnp.ndarray, desired: jnp.ndarray,
     ``edges`` is the (F, S) virtual-link layout (S = hop slots + NIC
     slots; id ``cap.shape[0] - 1`` is the write-only trash slot), ``w``
     the 0/1 flow weights, ``desired`` the requested rates and ``cap``
-    the link capacities, all in line-rate units.  ``backend=None`` picks
+    the link capacities, all in line-rate units.  ``active`` is the
+    optional (F,) dynamic-traffic mask: inactive rows are masked to the
+    trash slot INSIDE the step (their share comes back +inf), so callers
+    with arrival/departure lanes pass raw path edges (which may contain
+    -1 padding) plus the mask instead of materialising a masked edge
+    tensor per step.  ``backend=None`` picks
     :func:`repro.kernels.kernel_backend`; semantics are defined by
     :func:`repro.kernels.ref.waterfill_ref`.
     """
@@ -187,8 +203,10 @@ def waterfill_step(edges: jnp.ndarray, w: jnp.ndarray, desired: jnp.ndarray,
                          "choose 'pallas' or 'ref'")
     if backend == "ref":
         return ref.waterfill_ref(edges, w, desired, cap,
-                                 fair_iters=fair_iters)
-    return _pallas_waterfill(edges, w, desired, cap,
+                                 fair_iters=fair_iters, active=active)
+    act = (jnp.ones(edges.shape[0], jnp.float32) if active is None
+           else active.astype(jnp.float32))
+    return _pallas_waterfill(edges, w, desired, act, cap,
                              e_tot=int(cap.shape[0]),
                              fair_iters=int(fair_iters), bf=bf, be=be,
                              interpret=interpret_default(interpret))

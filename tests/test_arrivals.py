@@ -1,0 +1,136 @@
+"""Arrival-process subsystem: determinism/prefix-stability contract,
+process statistics, incast schedules, and the bisection normalizer."""
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip; the rest still run
+    from _hypothesis_stub import given, settings, st  # noqa: F401
+
+import jax
+
+from repro.core import arrivals, topology
+
+
+# ---- determinism / prefix stability -----------------------------------------
+@pytest.mark.parametrize("process", ["poisson", "pareto"])
+def test_activation_steps_prefix_stable(process):
+    """Same (key, flow) => same activation step regardless of how many
+    flows follow — the padding-class invariance the batched engines
+    (which bucket cells by padded flow count) rest on."""
+    key = jax.random.PRNGKey(7)
+    a = arrivals.activation_steps(key, 100, rate=0.5, process=process)
+    b = arrivals.activation_steps(key, 128, rate=0.5, process=process)
+    c = arrivals.activation_steps(key, 101, rate=0.5, process=process)
+    np.testing.assert_array_equal(a, b[:100])
+    np.testing.assert_array_equal(a, c[:100])
+    assert a.dtype == np.int32
+
+
+@pytest.mark.parametrize("process", ["poisson", "pareto"])
+def test_activation_steps_shape_and_order(process):
+    key = jax.random.PRNGKey(0)
+    s = arrivals.activation_steps(key, 200, rate=2.0, process=process)
+    assert s[0] == 0                      # flow 0 arrives immediately
+    assert (s >= 0).all()
+    assert (np.diff(s) >= 0).all()        # cumsum => non-decreasing
+    # different keys give different streams
+    s2 = arrivals.activation_steps(jax.random.PRNGKey(1), 200, rate=2.0,
+                                   process=process)
+    assert not np.array_equal(s, s2)
+
+
+def test_activation_steps_validation():
+    key = jax.random.PRNGKey(0)
+    assert arrivals.activation_steps(key, 0, rate=1.0).shape == (0,)
+    with pytest.raises(ValueError, match="rate"):
+        arrivals.activation_steps(key, 4, rate=0.0)
+    with pytest.raises(ValueError, match="process"):
+        arrivals.interarrival_gaps(key, 4, 1.0, process="uniform")
+    with pytest.raises(ValueError, match="Pareto"):
+        arrivals.interarrival_gaps(key, 4, 1.0, process="pareto", bound=0.5)
+
+
+# ---- process statistics -----------------------------------------------------
+def test_gap_means_match_configured_rate():
+    key = jax.random.PRNGKey(3)
+    for process in ("poisson", "pareto"):
+        gaps = arrivals.interarrival_gaps(key, 4000, 5.0, process=process)
+        assert gaps.min() > 0
+        assert abs(gaps.mean() / 5.0 - 1.0) < 0.15, (process, gaps.mean())
+
+
+def test_pareto_is_burstier_than_poisson():
+    """Bounded-Pareto interarrivals are heavy-tailed: at equal mean their
+    coefficient of variation exceeds the exponential's."""
+    key = jax.random.PRNGKey(11)
+    po = arrivals.interarrival_gaps(key, 4000, 1.0, process="poisson")
+    pa = arrivals.interarrival_gaps(key, 4000, 1.0, process="pareto",
+                                    shape=1.2, bound=512.0)
+    cv = lambda g: g.std() / g.mean()  # noqa: E731
+    assert cv(pa) > cv(po)
+
+
+# ---- incast schedule --------------------------------------------------------
+def test_incast_schedule_waves():
+    s = arrivals.incast_schedule(10, fan_in=4, wave_period=32)
+    np.testing.assert_array_equal(
+        s, [0, 0, 0, 0, 32, 32, 32, 32, 64, 64])
+    assert s.dtype == np.int32
+    with pytest.raises(ValueError):
+        arrivals.incast_schedule(4, fan_in=0, wave_period=8)
+
+
+# ---- offered load / bisection -----------------------------------------------
+def test_offered_load_accounting():
+    sizes = np.full(100, 1e6)
+    steps = np.arange(100)                # one flow per step, 100 steps
+    dt = 1e-5
+    cap = 1e6 / dt                        # 1 flow per step saturates cap
+    assert arrivals.offered_load(sizes, steps, dt, cap) == pytest.approx(1.0)
+    assert arrivals.offered_gbs(sizes, steps, dt) == pytest.approx(
+        1e6 / dt / 1e9)
+    assert arrivals.offered_load(np.zeros(0), np.zeros(0), dt, cap) == 0.0
+
+
+def test_bisection_exact_on_clique():
+    """clique(k=6) is a 7-router clique: every balanced 3/4 bipartition
+    cuts 3*4 pairs in both directions => 24 directed links, and the
+    sampled estimate is exact because all balanced cuts are minimal."""
+    t = topology.clique(6)
+    assert arrivals.bisection_bandwidth(t, line_rate=1.0) == 24.0
+    assert arrivals.bisection_bandwidth(t) == 24.0 * 12.5e9
+    # deterministic in the sampling seed
+    assert (arrivals.bisection_bandwidth(t, seed=5)
+            == arrivals.bisection_bandwidth(t, seed=5))
+
+
+def test_activation_starts_match_scan_clock():
+    """Start seconds are computed through the same float32 product the
+    scan uses for its step clock, so start <= i*dt flips exactly at the
+    activation step."""
+    steps = np.array([0, 1, 17, 1000], np.int32)
+    dt = 10e-6
+    starts = arrivals.activation_starts(steps, dt)
+    t_at = steps.astype(np.float32) * np.float32(dt)
+    assert (starts <= t_at).all()
+    t_before = (steps - 1).astype(np.float32) * np.float32(dt)
+    assert (starts[steps > 0] > t_before[steps > 0]).all()
+
+
+# ---- property: offered load converges to the configured level ---------------
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.floats(0.1, 0.9),
+       st.sampled_from(["poisson", "pareto"]))
+def test_offered_load_converges_to_level(seed, level, process):
+    """For any seed, a stream built at rate level*capacity*dt/size
+    realizes an offered load near `level` once the stream is long."""
+    capacity = 300e9
+    dt, size = 10e-6, 256e3
+    rate = level * capacity * dt / size
+    n = max(64, int(rate * 512))
+    steps = arrivals.activation_steps(jax.random.PRNGKey(seed), n,
+                                      rate=rate, process=process)
+    got = arrivals.offered_load(np.full(n, size), steps, dt, capacity)
+    assert abs(got - level) / level < 0.35, (got, level)

@@ -215,14 +215,17 @@ _PROG = textwrap.dedent("""
     assert jax.device_count() == 8, jax.device_count()
     grid = dict(topos=["clique(k=6)", "star(n=8)"],
                 routings=["ecmp(n=2)", "fatpaths(n_layers=3)"],
-                patterns=["uniform"], evaluators=["transport(steps=200)"],
+                patterns=["uniform", "load(level=0.4,window=96)"],
+                evaluators=["transport(steps=200)"],
                 seeds=[0])
     seq = Session().sweep(**grid)
     s8 = Session()
     d8 = dist_sweep(s8, s8.grid(**grid), devices=8)
     diffs = compare_results(seq, d8)
     assert diffs == [], diffs[:5]
-    chunks = [r.meta["sweep_chunks"] for r in d8]
+    assert any("offered_gbs" in r.meta for r in d8)  # dynamic cells batched
+    chunks = [r.meta["sweep_chunks"] for r in d8
+              if r.pattern.startswith("uniform")]
     assert all(c < 200 // 64 for c in chunks), chunks   # early exit fired
     print("DIST8_OK")
 """)

@@ -1,0 +1,205 @@
+"""Open-loop dynamic traffic through the transport scan: closed-loop
+reduction, activation gating, early-exit safety with pending arrivals,
+padding exactness of the activation lane, and the dynamic catalog axes
+(load / incast+outcast / anycast)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import topology, transport as TP
+from repro.core.traffic import make_workload
+from repro.experiments import ExperimentSpec, Session, compare_results
+from repro.experiments.dist_sweep import dist_sweep
+
+
+def _cell(n_steps=200, chunk=64, transport="tcp", adaptive=True, seed=3):
+    s = Session()
+    topo = s.topology("clique(k=6)")
+    bundle = s.routing("clique(k=6)", "fatpaths(n_layers=3)")
+    cfg = TP.SimConfig(transport=transport, balancing=bundle.balancing,
+                       n_steps=n_steps, horizon_chunk=chunk,
+                       adaptive_horizon=adaptive, seed=seed)
+    return topo, bundle, cfg
+
+
+# ---- closed-loop reduction --------------------------------------------------
+@pytest.mark.parametrize("transport", ["ndp", "tcp", "dctcp"])
+def test_all_zero_activation_is_bitwise_closed_loop(transport):
+    """active_step == zeros must reproduce the static-batch result bit
+    for bit: the activation predicate reduces to the old start-time
+    check, and the kernel's active lane to the old masking."""
+    topo, bundle, cfg = _cell(transport=transport)
+    wl = make_workload(topo, "uniform", seed=1)
+    base = TP.simulate(topo, bundle.routing, wl, cfg)
+    wl0 = dataclasses.replace(wl,
+                              active_step=np.zeros(wl.n_flows, np.int32))
+    dyn = TP.simulate(topo, bundle.routing, wl0, cfg)
+    np.testing.assert_array_equal(base.fct, dyn.fct)
+    np.testing.assert_array_equal(base.delivered, dyn.delivered)
+    np.testing.assert_array_equal(base.finished, dyn.finished)
+    np.testing.assert_array_equal(base.depart_step, dyn.depart_step)
+    assert base.link_util_mean == dyn.link_util_mean
+
+
+def test_activation_delays_departures():
+    """A flow cannot send, finish, or depart before its activation step;
+    a uniformly delayed copy of a workload finishes uniformly later."""
+    from repro.core.arrivals import activation_starts
+
+    topo, bundle, cfg = _cell()
+    wl = make_workload(topo, "uniform", seed=1)
+    base = TP.simulate(topo, bundle.routing, wl, cfg)
+    delay = 17
+    steps = np.full(wl.n_flows, delay, np.int32)
+    wl_d = dataclasses.replace(
+        wl, active_step=steps,
+        start=activation_starts(steps, cfg.dt))
+    dyn = TP.simulate(topo, bundle.routing, wl_d, cfg)
+    assert (dyn.depart_step[dyn.finished] >= delay).all()
+    # draws depend on (flow, step) — a delayed flow sees DIFFERENT draws,
+    # so completion is not a pure shift; but nothing finishes earlier
+    both = base.finished & dyn.finished
+    assert both.any()
+    assert (dyn.depart_step[both] > base.depart_step[both]).all()
+
+
+# ---- early exit with pending arrivals ---------------------------------------
+def test_early_exit_waits_for_late_arrivals():
+    """Arrivals extending past the first horizon chunk must not be
+    dropped by the early-exit predicate: adaptive == full horizon on
+    every result-bearing channel, including depart_step."""
+    topo, bundle, cfg = _cell(n_steps=320, chunk=32)
+    wl = make_workload(topo, "uniform", seed=1)
+    # all flows arrive AFTER the first chunk; staggered over chunks 2-5
+    from repro.core.arrivals import activation_starts
+    steps = (40 + 25 * (np.arange(wl.n_flows) % 4)).astype(np.int32)
+    wl = dataclasses.replace(wl, active_step=steps,
+                             start=activation_starts(steps, cfg.dt))
+    jarrs, static = TP.prepare(topo, bundle.routing, wl, cfg)
+    key = jax.random.PRNGKey(cfg.seed)
+    cfg_f = dataclasses.replace(cfg, adaptive_horizon=False)
+    fin_ad = jax.device_get(TP._run_scan(jarrs, key, cfg, static))
+    fin_fl = jax.device_get(TP._run_scan(jarrs, key, cfg_f, static))
+    for k in ("remaining", "hops", "sent_acc", "w_acc", "depart_step"):
+        np.testing.assert_array_equal(fin_ad[k], fin_fl[k], err_msg=k)
+    # and nothing departed before it arrived
+    dep = fin_ad["depart_step"]
+    assert (dep[dep >= 0] >= steps[dep >= 0]).all()
+
+
+def test_padding_preserves_dynamic_results():
+    """pad_prepared on a dynamic workload (extra flow rows, links, hop
+    slots) is bitwise exact — padded rows never activate."""
+    topo, bundle, cfg = _cell(n_steps=100, chunk=32)
+    wl = make_workload(topo, "uniform", seed=2)
+    from repro.core.arrivals import activation_starts
+    steps = (np.arange(wl.n_flows) % 50).astype(np.int32)
+    wl = dataclasses.replace(wl, active_step=steps,
+                             start=activation_starts(steps, cfg.dt))
+    base = TP.simulate(topo, bundle.routing, wl, cfg)
+    arrs, static = TP.prepare(topo, bundle.routing, wl, cfg)
+    F = arrs["size"].shape[0]
+    padded, pstatic = TP.pad_prepared(
+        arrs, static, n_flows=F + 11, n_edges=static[0] + 5,
+        hop_slots=arrs["path_edges"].shape[2] + 1)
+    fin = jax.device_get(TP._run_scan(padded, jax.random.PRNGKey(cfg.seed),
+                                      cfg, pstatic))
+    got = TP.batch_result(np.asarray(arrs["size"]),
+                          {k: np.asarray(v) for k, v in fin.items()},
+                          cfg, n_flows=F, start=np.asarray(arrs["start"]))
+    np.testing.assert_array_equal(got.fct, base.fct)
+    np.testing.assert_array_equal(got.delivered, base.delivered)
+    np.testing.assert_array_equal(got.depart_step, base.depart_step)
+    assert got.link_util_mean == base.link_util_mean
+
+
+# ---- engine identity on dynamic cells ---------------------------------------
+def test_dist_engine_matches_sequential_on_dynamic_cells():
+    grid = dict(topos=["clique(k=6)"],
+                routings=["fatpaths(n_layers=3)", "ecmp(n=2)"],
+                patterns=["load(level=0.4,window=96)",
+                          "incast(fan_in=4,waves=3,wave_period=32)"],
+                evaluators=["transport(steps=150)"], seeds=[0])
+    seq = Session().sweep(**grid)
+    s = Session()
+    dist = dist_sweep(s, s.grid(**grid), devices=1)
+    assert compare_results(seq, dist) == []
+    assert all("offered_gbs" in r.meta for r in dist)
+
+
+# ---- catalog axes -----------------------------------------------------------
+def test_load_cell_reports_offered_rate():
+    r = Session().run(ExperimentSpec.make(
+        "clique(k=6)", "fatpaths(n_layers=3)", "load(level=0.4,window=96)",
+        "transport(steps=150)"))
+    assert r.meta["offered_gbs"] > 0
+    assert np.isfinite(r.metrics["fct_p50_us"])
+
+
+def test_load_level_scales_flow_count():
+    s = Session()
+    topo = s.topology("clique(k=6)")
+    lo = s.workload("clique(k=6)", "load(level=0.2,window=96)")
+    hi = s.workload("clique(k=6)", "load(level=0.8,window=96)")
+    assert hi.n_flows > 2.5 * lo.n_flows
+    for wl in (lo, hi):
+        assert wl.active_step is not None
+        assert (np.diff(wl.active_step) >= 0).all()
+        assert wl.n_flows <= topo.n_endpoints * 100
+
+
+def test_incast_outcast_cell_reports_fairness():
+    r = Session().run(ExperimentSpec.make(
+        "clique(k=6)", "fatpaths(n_layers=3)",
+        "incast(fan_in=4,waves=3,wave_period=32)", "outcast(steps=300)"))
+    m = r.metrics
+    assert m["victim_flows"] == 12.0          # 3 waves x 4 senders
+    assert 0.0 < m["jain_goodput"] <= 1.0 + 1e-9
+    assert m["fct_p99_over_p50"] >= 1.0
+    assert np.isfinite(m["fct_p50_us"])
+
+
+def test_incast_workload_structure():
+    s = Session()
+    wl = s.workload("clique(k=6)", "incast(fan_in=4,waves=3,wave_period=32)")
+    assert wl.n_flows == 24                   # 12 data + 12 ack
+    data, ack = ~wl.is_ack, wl.is_ack
+    assert data.sum() == ack.sum() == 12
+    victim = np.unique(wl.dst[data])
+    assert len(victim) == 1                   # single victim
+    assert (wl.src[ack] == victim[0]).all()   # acks flow back from it
+    assert (wl.size[ack] < wl.size[data]).all()
+    np.testing.assert_array_equal(np.unique(wl.active_step), [0, 32, 64])
+
+
+def test_anycast_policy_orders_path_length():
+    """closest resolves each client to a nearer replica than farthest
+    does (strictly nearer somewhere on a non-degenerate topology)."""
+    import jax.numpy as jnp
+
+    from repro.core import paths as paths_mod
+
+    s = Session()
+    topo = s.topology("hx(l=2,s=3)")
+    near = s.workload("hx(l=2,s=3)", "anycast(replicas=3,policy=closest)")
+    far = s.workload("hx(l=2,s=3)", "anycast(replicas=3,policy=farthest)")
+    np.testing.assert_array_equal(near.src, far.src)  # same clients
+    dist = np.asarray(paths_mod.shortest_path_lengths(
+        jnp.asarray(np.asarray(topo.adj, bool)), max_l=16))
+    d_near = dist[near.src_router, near.dst_router]
+    d_far = dist[far.src_router, far.dst_router]
+    assert (d_near <= d_far).all()
+    assert d_near.mean() < d_far.mean()
+    assert near.active_step is not None
+
+
+def test_anycast_rejects_unknown_policy():
+    from repro.experiments.specs import SpecError
+
+    with pytest.raises(SpecError, match="policy"):
+        Session().workload("clique(k=6)", "anycast(policy=nearest)")

@@ -67,3 +67,42 @@ def test_make_workload(sf5):
                 "alltoone", "adversarial", "worstcase"):
         wl = TR.make_workload(sf5, pat, seed=0)
         assert wl.n_flows > 0
+
+
+def test_all_to_one_endpoint_distribution():
+    """Every non-target endpoint sends to the single target; the target
+    itself gets an arbitrary non-self destination."""
+    for seed in range(4):
+        t = np.asarray(TR.all_to_one(32, seed=seed))
+        dst, cnt = np.unique(t, return_counts=True)
+        tgt = dst[np.argmax(cnt)]
+        assert cnt.max() >= 31                  # all senders hit the target
+        assert t[tgt] != tgt                    # target never self-sends
+        others = np.setdiff1d(np.arange(32), [tgt])
+        assert (t[others] == tgt).all()
+
+
+def test_all_to_one_acks_mode():
+    src, dst, is_ack = TR.all_to_one(16, seed=2, acks=True)
+    n_data = (~is_ack).sum()
+    assert n_data == is_ack.sum() == 15         # one ack per data flow
+    tgt = np.unique(dst[~is_ack])
+    assert len(tgt) == 1
+    tgt = tgt[0]
+    assert (src[is_ack] == tgt).all()           # acks flow back from target
+    # reverse pairing: ack i mirrors data i
+    np.testing.assert_array_equal(dst[is_ack], src[~is_ack])
+    assert tgt not in src[~is_ack]
+
+
+def test_make_workload_alltoone_acks(sf5):
+    wl = TR.make_workload(sf5, "alltoone", seed=0, acks=True, ack_frac=0.1)
+    assert wl.is_ack is not None
+    n = sf5.n_endpoints
+    assert wl.n_flows == 2 * (n - 1)
+    data, ack = ~wl.is_ack, wl.is_ack
+    assert (wl.size[ack] < wl.size[data].min()).all()
+    # without acks the lane stays unset and flow count halves
+    plain = TR.make_workload(sf5, "alltoone", seed=0)
+    assert plain.is_ack is None
+    assert plain.n_flows == n - 1 or plain.n_flows == n

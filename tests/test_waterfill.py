@@ -51,6 +51,39 @@ def test_kernel_matches_oracle(f, s, e, fair_iters):
                                rtol=1e-5)
 
 
+@pytest.mark.parametrize("f,s,e", [(7, 3, 19), (130, 9, 513)])
+def test_active_lane_matches_oracle_and_masking(f, s, e):
+    """The dynamic-traffic active lane: kernel == oracle under a mixed
+    active mask, inactive rows send nothing and see an uncongested
+    network (+inf share), and active=all-True == active=None bitwise.
+    Raw -1 walk padding in the edge tensor must be tolerated."""
+    edges, w, desired, cap = _instance(f, s, e, seed=e, idle_frac=0.0)
+    edges = np.array(edges)               # writable copy
+    rng = np.random.default_rng(5)
+    edges[rng.random((f, s)) < 0.2] = -1          # raw walk padding
+    edges = jnp.asarray(edges)
+    active = jnp.asarray(rng.random(f) < 0.6)
+    sent_k, share_k = waterfill_step(edges, w, desired, cap,
+                                     active=active, backend="pallas",
+                                     interpret=True)
+    sent_r, share_r = ref.waterfill_ref(edges, w, desired, cap,
+                                        active=active)
+    np.testing.assert_allclose(np.asarray(sent_k), np.asarray(sent_r),
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(share_k), np.asarray(share_r),
+                               rtol=1e-5)
+    inact = ~np.asarray(active)
+    assert (np.asarray(sent_r)[inact] == 0).all()
+    assert np.isposinf(np.asarray(share_r)[inact]).all()
+    # all-active lane is bitwise the no-lane path (closed-loop reduction)
+    e2 = jnp.where(edges >= 0, edges, e - 1)
+    s_all, sh_all = ref.waterfill_ref(e2, w, desired, cap,
+                                      active=jnp.ones(f, bool))
+    s_none, sh_none = ref.waterfill_ref(e2, w, desired, cap)
+    np.testing.assert_array_equal(np.asarray(s_all), np.asarray(s_none))
+    np.testing.assert_array_equal(np.asarray(sh_all), np.asarray(sh_none))
+
+
 def _link_load(edges, sent, e):
     load = np.zeros(e)
     np.add.at(load, np.asarray(edges).reshape(-1),
@@ -131,7 +164,7 @@ def test_early_exit_equals_full_horizon(balancing):
     fin_ad = jax.device_get(TP._run_scan(jarrs, key, mk(True), static))
     fin_fl = jax.device_get(TP._run_scan(jarrs, key, mk(False), static))
     assert int(fin_ad["horizon_chunks"]) < int(fin_fl["horizon_chunks"])
-    for k in ("remaining", "fct", "hops", "sent_acc", "w_acc"):
+    for k in ("remaining", "hops", "sent_acc", "w_acc", "depart_step"):
         np.testing.assert_array_equal(fin_ad[k], fin_fl[k], err_msg=k)
     ra = TP._to_result(np.asarray(jarrs["size"]), fin_ad, mk(True))
     rf = TP._to_result(np.asarray(jarrs["size"]), fin_fl, mk(False))
@@ -159,7 +192,7 @@ def test_early_exit_on_provably_stuck_flows():
     fin_ad = jax.device_get(TP._run_scan(jarrs, key, cfg, static))
     fin_fl = jax.device_get(TP._run_scan(jarrs, key, cfg_f, static))
     assert int(fin_ad["horizon_chunks"]) < int(fin_fl["horizon_chunks"])
-    for k in ("remaining", "fct", "hops", "sent_acc", "w_acc"):
+    for k in ("remaining", "hops", "sent_acc", "w_acc", "depart_step"):
         np.testing.assert_array_equal(fin_ad[k], fin_fl[k], err_msg=k)
     # stuck flows really never went anywhere
     assert (fin_ad["remaining"][np.asarray(sick)] ==
