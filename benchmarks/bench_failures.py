@@ -1,0 +1,69 @@
+"""Fault-injection engine cost (CI-guarded).
+
+Two guarded keys track the two fault paths a robustness sweep pays for:
+
+  * ``failures/mask_apply``    — drawing a scenario mask and repairing a
+    full layer stack against the masked adjacency (the per-scenario
+    setup cost of a static degradation sweep; one batched semiring
+    re-resolve for the whole stack);
+  * ``failures/degraded_step`` — per-step cost of the transport scan
+    with the mid-run link-down capacity lane active (one extra int32
+    operand + one capacity select per step vs the pristine scan).
+
+Derived columns carry the damage accounting (failed links, dead layers,
+disconnected pairs) so the perf trajectory records WHAT was degraded
+alongside how fast.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .common import emit, get_session, timeit
+
+SF = "sf(q=5)"
+FATPATHS = "fatpaths(n_layers=9,rho=0.6)"
+
+
+def main(quick: bool = False) -> None:
+    from repro.core import failures as F
+    from repro.core import transport as TP
+
+    session = get_session()
+    topo = session.topology(SF)
+    lr = session.routing(SF, FATPATHS, seed=1).routing
+    adj = np.asarray(topo.adj, dtype=bool)
+    key = F.scenario_key(1)
+
+    # ---- mask + repair (CI-guarded): one static scenario end to end ----
+    def scenario():
+        dead = F.failure_mask(key, adj, 0.15, "bernoulli")
+        return F.apply_failures(lr, dead, mode="repair", rate=0.15)
+
+    us = timeit(scenario, n=3, warmup=1)
+    _, rep = scenario()
+    emit("failures/mask_apply/sf5", us,
+         f"layers={lr.n_layers} failed={rep.failed_links} "
+         f"deadlayers={rep.dead_layers} disc={rep.disconnected_pairs}")
+
+    # ---- mid-run death lane (CI-guarded): per-step scan cost with the
+    # link-down capacity select active, vs the pristine scan ------------
+    wl = session.workload(SF, "permutation", seed=1)
+    n_steps = 400
+    dead = F.failure_mask(key, adj, 0.15, "bernoulli")
+    hurt = dataclasses.replace(
+        lr, link_down_step=F.link_down_schedule(dead, n_steps // 2))
+    cfg = TP.SimConfig(n_steps=n_steps, adaptive_horizon=False)
+    us_d = timeit(lambda: TP.simulate(topo, hurt, wl, cfg), n=3, warmup=1)
+    us_p = timeit(lambda: TP.simulate(topo, lr, wl, cfg), n=1, warmup=1)
+    emit("failures/degraded_step/sf5",
+         dataclasses.replace(us_d, min_us=us_d.min_us / n_steps,
+                             median_us=us_d.median_us / n_steps),
+         f"steps={n_steps} n_flows={wl.n_flows} "
+         f"pristine_us={us_p.min_us / n_steps:.1f} horizon=full")
+
+
+if __name__ == "__main__":
+    main()

@@ -48,7 +48,11 @@ Guarded:
                                   lane of the fused scan;
   * ``sweep/dist/…``            — bench_sweep distributed-engine wall
                                   time for the whole quick grid (the
-                                  scale keystone's contract).
+                                  scale keystone's contract);
+  * ``failures/…``              — bench_failures fault-injection costs:
+                                  scenario mask + stack repair, and the
+                                  per-step price of the mid-run
+                                  link-down capacity lane.
 """
 
 from __future__ import annotations
@@ -61,7 +65,7 @@ import sys
 
 GUARDED = [r"^fig12/disjoint/", r"^transport/steptime/",
            r"^transport/fusedstep/", r"^transport/earlyexit/",
-           r"^transport/openloop/", r"^sweep/dist/"]
+           r"^transport/openloop/", r"^sweep/dist/", r"^failures/"]
 CALIBRATE = r"^kernels/pathcount/"
 
 

@@ -151,14 +151,20 @@ def bisection_bandwidth(topo, line_rate: float = 12.5e9, samples: int = 32,
     sampling estimate (true bisection minimizes over ALL balanced cuts),
     deterministic in ``seed`` — good enough as the normalizer that
     ``load(level=...)`` sweeps express offered load against, and exact
-    on symmetric topologies where every balanced cut is minimal."""
+    on symmetric topologies where every balanced cut is minimal.
+
+    Each bipartition is drawn from its own ``default_rng((seed, i))``
+    stream: sample i depends only on ``(seed, i)``, never on how many
+    samples ran before it, so the estimate is stable across processes
+    and across ``samples`` prefixes (the per-index keying contract the
+    rest of the repo's PRNG draws follow)."""
     adj = np.asarray(topo.adj, dtype=bool)
     n = adj.shape[0]
     if n < 2:
         return float(line_rate)
-    rng = np.random.default_rng(seed)
     best = None
-    for _ in range(max(1, int(samples))):
+    for i in range(max(1, int(samples))):
+        rng = np.random.default_rng((int(seed), i))
         side = np.zeros(n, dtype=bool)
         side[rng.permutation(n)[:n // 2]] = True
         cut = int(adj[side][:, ~side].sum() + adj[~side][:, side].sum())

@@ -1,0 +1,276 @@
+"""Fault injection: seeded failure masks + degraded layer stacks.
+
+FatPaths' central claim is that "fat" path diversity buys robustness;
+this module is the machinery that tests it.  Three pieces:
+
+1. **Failure masks** — seeded, deterministic sets of dead links drawn
+   per-link from ``fold_in(key, link_id)`` (the same per-index keying
+   contract as :mod:`repro.core.arrivals`): a draw depends only on the
+   scenario key and the link's canonical id, never on array shapes,
+   padding, or which other links exist.  Patterns:
+
+   * ``bernoulli`` — each undirected link fails independently iff its
+     uniform is below ``rate``;
+   * ``switch``    — correlated switch-kill: each *router* fails iff its
+     uniform is below ``rate``; every incident link dies with it;
+   * ``blast``     — an incident with a blast radius: the epicenter
+     router is the argmin of the router uniforms, and the
+     ``ceil(rate * n_links)`` links nearest to it (by hop distance of
+     their nearer endpoint, ties broken by link id) die together.
+
+   All three are *nested* in ``rate``: the dead set at a lower rate is a
+   subset of the dead set at any higher rate (one uniform per entity,
+   compared against a moving threshold — or a fixed kill ordering for
+   ``blast``).  Degradation curves over a rate sweep are therefore
+   monotone in the failure *set*, not just in expectation.
+
+2. **Static degradation** (:func:`apply_failures`) — applies a mask to a
+   built :class:`~repro.core.layers.LayeredRouting` stack *before* the
+   run.  ``mode="repair"`` re-resolves every layer's next hops against
+   the masked adjacency through the batched semiring engine (modelling
+   routing re-convergence; repaired tables are shortest-path tables of
+   the surviving graph, hence loop-free by construction).
+   ``mode="drop"`` keeps the pristine tables and invalidates every
+   (layer, s, t) entry whose walk crosses a dead link (modelling
+   no-reconvergence: traffic on broken entries is simply lost, so the
+   balancer must avoid them); surviving entries are a sub-table of a
+   shortest-path table and stay loop-free.  Layers left with no usable
+   off-diagonal pair are counted in ``dead_layers``.
+
+3. **Mid-run link death** (:func:`link_down_schedule`) — a per-link
+   death step threaded through the fused waterfill scan as a capacity
+   mask (the PR-6 activation-lane pattern): at step >= death the link's
+   capacity is 0, flows on it stall, and the flowlet-gap timer re-picks
+   among the surviving usable layers at the next flowlet boundary.
+
+An *empty* mask short-circuits: :func:`apply_failures` returns the input
+stack object unchanged, so ``failures(rate=0)`` cells reproduce the
+pristine cell bit-for-bit (a repair rebuild, even of an unmasked graph,
+could re-draw tie-breaks and change results).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import paths as paths_mod
+from .layers import LayeredRouting, _UNREACH
+
+__all__ = ["PATTERNS", "scenario_key", "link_uniforms", "failure_mask",
+           "apply_failures", "link_down_schedule", "FailureReport"]
+
+PATTERNS = ("bernoulli", "switch", "blast")
+
+_INT32_MAX = np.iinfo(np.int32).max
+
+
+def scenario_key(seed: int, fseed: int = 0) -> jnp.ndarray:
+    """PRNG key for one failure scenario.
+
+    ``seed`` is the experiment seed (so seed sweeps sample scenarios) and
+    ``fseed`` an extra scenario index for batching thousands of scenarios
+    under one experiment seed.  The key deliberately does NOT depend on
+    the routing scheme: within a cell seed, every scheme faces the SAME
+    dead links, so scheme curves are comparable under identical damage.
+    """
+    base = jax.random.fold_in(jax.random.PRNGKey(0xFA1), int(seed))
+    return jax.random.fold_in(base, int(fseed))
+
+
+@jax.jit
+def _uniforms_by_id(key, ids):
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(ids)
+    return jax.vmap(lambda k: jax.random.uniform(k, ()))(keys)
+
+
+def link_uniforms(key, ids) -> np.ndarray:
+    """One U(0,1) per integer id, drawn from ``fold_in(key, id)`` — the
+    draw for an id is independent of every other id present (vmappable,
+    padding/shape independent)."""
+    ids = np.asarray(ids, dtype=np.uint32)
+    if ids.size == 0:
+        return np.zeros(0, dtype=np.float64)
+    return np.asarray(_uniforms_by_id(key, jnp.asarray(ids)),
+                      dtype=np.float64)
+
+
+def _undirected_links(adj: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    a = np.asarray(adj, dtype=bool)
+    return np.nonzero(np.triu(a, 1))
+
+
+def failure_mask(key, adj: np.ndarray, rate: float,
+                 pattern: str = "bernoulli") -> np.ndarray:
+    """(N, N) bool symmetric mask of DEAD links for one scenario.
+
+    Link ids are canonical (``u * N + v`` with u < v); router draws live
+    in the disjoint id space ``N*N + r``.  Masks are nested in ``rate``
+    (see module docstring).
+    """
+    if pattern not in PATTERNS:
+        raise ValueError(f"unknown failure pattern {pattern!r}; "
+                         f"choose from {PATTERNS}")
+    a = np.asarray(adj, dtype=bool)
+    n = a.shape[0]
+    iu, ju = _undirected_links(a)
+    dead = np.zeros((n, n), dtype=bool)
+    rate = float(rate)
+    if len(iu) == 0 or rate <= 0.0:
+        return dead
+    if pattern == "bernoulli":
+        u = link_uniforms(key, iu.astype(np.int64) * n + ju)
+        kill = u < rate
+    elif pattern == "switch":
+        ur = link_uniforms(key, n * n + np.arange(n))
+        down = ur < rate
+        kill = down[iu] | down[ju]
+    elif pattern == "blast":
+        ur = link_uniforms(key, n * n + np.arange(n))
+        epi = int(np.argmin(ur))
+        hops = np.asarray(paths_mod.shortest_path_lengths(
+            jnp.asarray(a), max_l=64))[epi].astype(np.int64)
+        k = int(np.ceil(rate * len(iu)))
+        order = np.lexsort((iu.astype(np.int64) * n + ju,
+                            np.minimum(hops[iu], hops[ju])))
+        kill = np.zeros(len(iu), dtype=bool)
+        kill[order[:k]] = True
+    dead[iu[kill], ju[kill]] = True
+    dead[ju[kill], iu[kill]] = True
+    return dead
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureReport:
+    """Host-side summary of one applied failure scenario."""
+
+    failed_links: int          # undirected links killed
+    total_links: int
+    rate: float
+    pattern: str
+    mode: str
+    dead_layers: int           # layers left with no usable off-diag pair
+    disconnected_pairs: int    # router pairs reachable before, by no layer now
+    down_step: int = -1        # mid-run death step (-1 = static/pre-run)
+
+    def as_meta(self) -> Dict[str, object]:
+        """JSON-safe dict merged into cell meta by both sweep engines."""
+        return {
+            "failed_links": int(self.failed_links),
+            "total_links": int(self.total_links),
+            "failure_rate": float(self.rate),
+            "failure_pattern": str(self.pattern),
+            "failure_mode": str(self.mode),
+            "dead_layers": int(self.dead_layers),
+            "disconnected_pairs": int(self.disconnected_pairs),
+            "link_down_step": int(self.down_step),
+        }
+
+
+def _off_diag(n: int) -> np.ndarray:
+    return ~np.eye(n, dtype=bool)
+
+
+def _count_report(lr: LayeredRouting, reach_before: np.ndarray,
+                  reach_after: np.ndarray, dead: np.ndarray, rate: float,
+                  pattern: str, mode: str, down_step: int = -1
+                  ) -> FailureReport:
+    n = reach_before.shape[1]
+    off = _off_diag(n)
+    before_l = (reach_before & off[None]).any(axis=(1, 2))
+    after_l = (reach_after & off[None]).any(axis=(1, 2))
+    pair_before = reach_before.any(axis=0) & off
+    pair_after = reach_after.any(axis=0) & off
+    iu, ju = _undirected_links(lr.topo.adj)
+    return FailureReport(
+        failed_links=int(np.triu(dead, 1).sum()),
+        total_links=int(len(iu)),
+        rate=float(rate),
+        pattern=pattern,
+        mode=mode,
+        dead_layers=int((before_l & ~after_l).sum()),
+        disconnected_pairs=int((pair_before & ~pair_after).sum()),
+        down_step=int(down_step),
+    )
+
+
+def apply_failures(lr: LayeredRouting, dead: np.ndarray,
+                   mode: str = "repair", seed: int = 0,
+                   rate: float = 0.0, pattern: str = "bernoulli",
+                   max_len: Optional[int] = None
+                   ) -> Tuple[LayeredRouting, FailureReport]:
+    """Degraded copy of ``lr`` under the dead-link mask (pre-run damage).
+
+    ``mode="repair"``: every layer's next hops are re-resolved against
+    its masked adjacency via the batched semiring engine (ONE device
+    program for the whole stack) — routing has re-converged around the
+    failures, so paths may lengthen but every surviving pair stays
+    routable within the layer.  ``mode="drop"``: the pristine tables are
+    kept and every (layer, s, t) entry whose walk crosses a dead link is
+    invalidated on device (no re-convergence; the load balancer simply
+    avoids broken entries).  Both modes are loop-free: repaired tables
+    are shortest-path tables, dropped tables are sub-tables of one.
+
+    An empty mask returns ``lr`` ITSELF (not a copy): rate-0 scenarios
+    are bit-for-bit the pristine cell.
+    """
+    dead = np.asarray(dead, dtype=bool)
+    if not dead.any():
+        report = _count_report(lr, lr.reach, lr.reach, dead, rate, pattern,
+                               mode)
+        return lr, report
+    if mode not in ("repair", "drop"):
+        raise ValueError(f"unknown failure mode {mode!r}")
+
+    masked_la = lr.layer_adj & ~dead[None]
+    n = dead.shape[0]
+    idx = np.arange(n)
+
+    if mode == "repair":
+        if max_len is None:
+            # Re-converged paths detour around failures: build slack + 2.
+            max_len = max(6, lr.topo.diameter_nominal + 6)
+        nbr = jnp.asarray(paths_mod.neighbor_table(masked_la.any(axis=0)))
+        key = jax.random.fold_in(jax.random.PRNGKey(int(seed)), 0xF1)
+        nh_j, reach_j, dist_j = paths_mod._layer_tables_program(
+            jnp.asarray(masked_la), nbr, key, max_len)
+        reach = np.asarray(reach_j)
+        nh = np.asarray(nh_j)
+        pathlen = np.where(reach, np.asarray(dist_j),
+                           _UNREACH).astype(np.int16)
+    else:
+        # Walks take exactly pathlen hops (shortest-path forwarding), so
+        # the stack's longest reachable path bounds the fixpoint depth.
+        max_hops = int(lr.pathlen[lr.reach].max(initial=1)) + 1
+        valid = np.asarray(paths_mod.table_validity_batched(
+            jnp.asarray(lr.nh), jnp.asarray(~dead), max_hops))
+        reach = lr.reach & valid
+        off = _off_diag(n)
+        layer_dead = ~(reach & off[None]).any(axis=(1, 2))
+        reach = reach & ~layer_dead[:, None, None]
+        nh = np.where(reach, lr.nh, -1).astype(np.int32)
+        nh[:, idx, idx] = idx
+        pathlen = np.where(reach, lr.pathlen, _UNREACH).astype(np.int16)
+
+    report = _count_report(lr, lr.reach, reach, dead, rate, pattern, mode)
+    degraded = dataclasses.replace(
+        lr, nh=nh, reach=reach, pathlen=pathlen, layer_adj=masked_la,
+        build_stats=None, link_down_step=None)
+    return degraded, report
+
+
+def link_down_schedule(dead: np.ndarray, step: int) -> np.ndarray:
+    """(N, N) int32 per-directed-link death step for mid-run failures.
+
+    Masked links die (capacity -> 0) at scan step ``step``; surviving
+    links carry INT32_MAX (never die).  Fed to the transport scan via
+    ``LayeredRouting.link_down_step``.
+    """
+    dead = np.asarray(dead, dtype=bool)
+    sym = dead | dead.T
+    return np.where(sym, np.int32(step),
+                    np.int32(_INT32_MAX)).astype(np.int32)

@@ -43,7 +43,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -52,10 +52,40 @@ import numpy as np
 from . import paths as paths_mod
 from .topology import Topology
 
-__all__ = ["LayeredRouting", "build_layers", "layer_disjoint_paths",
-           "layer_disjoint_paths_batch"]
+__all__ = ["LayeredRouting", "LoopCheckReport", "build_layers",
+           "layer_disjoint_paths", "layer_disjoint_paths_batch"]
 
 _UNREACH = 10_000
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopCheckReport:
+    """Outcome of :meth:`LayeredRouting.validate_loop_free`.
+
+    Truthy iff every checked entry delivered.  ``witnesses`` holds the
+    offending ``(layer, src, dst)`` triples (capped), each tagged in
+    ``kinds`` as ``"hole"`` (walk fell off the table) or ``"loop"``
+    (walk never reached dst within the hop budget).
+    """
+
+    ok: bool
+    n_checked: int
+    exhaustive: bool
+    witnesses: Tuple[Tuple[int, int, int], ...] = ()
+    kinds: Tuple[str, ...] = ()
+
+    def __bool__(self) -> bool:
+        return self.ok
+
+    def describe(self) -> str:
+        if self.ok:
+            mode = "exhaustive" if self.exhaustive else "sampled"
+            return f"loop-free ({self.n_checked} entries, {mode})"
+        shown = ", ".join(f"{k}@(l={li},s={s},t={t})" for (li, s, t), k
+                          in zip(self.witnesses, self.kinds))
+        return (f"{len(self.witnesses)} bad forwarding entr"
+                f"{'y' if len(self.witnesses) == 1 else 'ies'} "
+                f"of {self.n_checked} checked: {shown}")
 
 
 @dataclasses.dataclass
@@ -70,6 +100,10 @@ class LayeredRouting:
     pathlen: np.ndarray     # (L, N, N) int16 intra-layer shortest-path length
     layer_adj: np.ndarray   # (L, N, N) bool directed layer adjacency
     build_stats: Optional[Dict[str, float]] = None  # wall-time split
+    # Per-directed-link death step for mid-run failures ((N, N) int32,
+    # INT32_MAX = never dies); None = pristine fabric.  Set by the
+    # fault-injection engine (repro.core.failures.link_down_schedule).
+    link_down_step: Optional[np.ndarray] = None
 
     @property
     def n_layers(self) -> int:
@@ -79,24 +113,52 @@ class LayeredRouting:
         return np.nonzero(self.reach[:, s, t])[0]
 
     def validate_loop_free(self, n_samples: int = 200, seed: int = 0,
-                           max_hops: int = 64) -> None:
-        """Walk the tables for random (layer, s, t); every reachable entry
-        must hit t within max_hops (shortest-path forwarding => loop-free).
-        All samples walk in ONE batched table walk."""
-        rng = np.random.default_rng(seed)
+                           max_hops: int = 64, raise_on_fail: bool = True,
+                           max_witnesses: int = 16) -> LoopCheckReport:
+        """Walk the tables for (layer, s, t) entries; every reachable
+        entry must hit t within max_hops (shortest-path forwarding =>
+        loop-free).  All samples walk in ONE batched table walk.
+
+        When ``n_samples`` covers the whole ``L * N * (N - 1)`` entry
+        space the check enumerates EVERY entry instead of sampling with
+        replacement (sampling could silently miss entries while
+        appearing thorough).  Returns a :class:`LoopCheckReport` naming
+        the offending ``(layer, src, dst)`` witnesses (capped at
+        ``max_witnesses``); with ``raise_on_fail`` (the default) a bad
+        table raises ``AssertionError`` carrying the same witnesses.
+        """
         L, N, _ = self.nh.shape
-        li = rng.integers(L, size=n_samples)
-        s = rng.integers(N, size=n_samples)
-        t = (s + 1 + rng.integers(N - 1, size=n_samples)) % N  # t != s
+        total = L * N * (N - 1)
+        exhaustive = n_samples >= total
+        if exhaustive:
+            li, s, t = np.nonzero(~np.eye(N, dtype=bool)[None]
+                                  & np.ones((L, N, N), dtype=bool))
+        else:
+            rng = np.random.default_rng(seed)
+            li = rng.integers(L, size=n_samples)
+            s = rng.integers(N, size=n_samples)
+            t = (s + 1 + rng.integers(N - 1, size=n_samples)) % N  # t != s
         keep = self.reach[li, s, t]
         li, s, t = li[keep], s[keep], t[keep]
+        if len(li) == 0:
+            return LoopCheckReport(ok=True, n_checked=0,
+                                   exhaustive=exhaustive)
         seqs = paths_mod.walk_paths_layers(self.nh, li, s, t, max_hops)
         holes = (seqs < 0).any(axis=1)
-        assert not holes.any(), \
-            f"hole in layer(s) {sorted(set(li[holes].tolist()))}"
-        stuck = seqs[:, -1] != t
-        assert not stuck.any(), \
-            f"loop in layer(s) {sorted(set(li[stuck].tolist()))}"
+        stuck = ~holes & (seqs[:, -1] != t)
+        bad = holes | stuck
+        witnesses = []
+        kinds = []
+        for i in np.nonzero(bad)[0][:max_witnesses]:
+            witnesses.append((int(li[i]), int(s[i]), int(t[i])))
+            kinds.append("hole" if holes[i] else "loop")
+        report = LoopCheckReport(ok=not bad.any(), n_checked=int(len(li)),
+                                 exhaustive=exhaustive,
+                                 witnesses=tuple(witnesses),
+                                 kinds=tuple(kinds))
+        if raise_on_fail:
+            assert report.ok, report.describe()
+        return report
 
 
 def _rand_layer(adj: np.ndarray, rho: float, rng: np.random.Generator,

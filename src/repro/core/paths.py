@@ -45,6 +45,7 @@ __all__ = [
     "min_path_stats",
     "next_hop_options",
     "build_forwarding",
+    "table_validity_batched",
     "walk_paths",
     "walk_paths_layers",
 ]
@@ -235,6 +236,35 @@ def edge_usage_batched(nh: jnp.ndarray, reach: jnp.ndarray,
     """Directed-edge usage counts for an (L, N, N) table stack (f32,
     exact below 2**24)."""
     return jax.vmap(lambda a, b: _edge_usage_core(a, b, max_hops))(nh, reach)
+
+
+@functools.partial(jax.jit, static_argnames=("max_hops",))
+def table_validity_batched(nh: jnp.ndarray, alive: jnp.ndarray,
+                           max_hops: int) -> jnp.ndarray:
+    """``valid[l, s, t]`` — the (layer, s, t) forwarding entry still
+    delivers: every hop of the walk from s to t traverses an alive
+    directed edge (``alive[u, nh[u, t]]``) and terminates at t within
+    ``max_hops``.  The fixpoint grows from the diagonal
+    (``valid = eye | (edge alive & valid at next hop)``), so loops and
+    dead-edge walks never validate.  Used by the fault-injection engine
+    (:mod:`repro.core.failures`, ``mode="drop"``) to strip broken
+    entries from pristine tables without re-converging routes.
+    """
+    _, n, _ = nh.shape
+    eye = jnp.eye(n, dtype=bool)
+    idx = jnp.arange(n)
+    alive = alive.astype(jnp.bool_)
+
+    def one_layer(nh_l):
+        nxt = jnp.clip(nh_l, 0).astype(jnp.int32)
+        edge_ok = (nh_l >= 0) & alive[idx[:, None], nxt]
+
+        def body(_, valid):
+            return eye | (edge_ok & jnp.take_along_axis(valid, nxt, axis=0))
+
+        return jax.lax.fori_loop(0, max_hops, body, eye)
+
+    return jax.vmap(one_layer)(nh)
 
 
 @functools.partial(jax.jit, static_argnames=("max_l",))

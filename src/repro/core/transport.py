@@ -276,7 +276,7 @@ def _prepare(topo: Topology, routing: LayeredRouting, wl: FlowWorkload,
         active_at = jnp.zeros(n_flows, dtype=jnp.int32)
     else:
         active_at = jnp.asarray(active_step, dtype=jnp.int32)
-    return dict(
+    out = dict(
         path_edges=path_edges,                         # (L, F, H+2)
         routed=routed,                                 # (L, F)
         path_hops=(edges >= 0).sum(axis=2).astype(jnp.float32),  # (L, F)
@@ -287,6 +287,19 @@ def _prepare(topo: Topology, routing: LayeredRouting, wl: FlowWorkload,
         e_tot=e_tot,
         n_layers=n_layers,
     )
+    # Mid-run link-death lane (fault injection): per-virtual-link death
+    # step, INT32_MAX = never dies.  The key is ABSENT for pristine
+    # fabrics — the scan's capacity select is gated at trace time, so a
+    # fabric without scheduled failures compiles to a program bitwise
+    # identical to one built before this lane existed.
+    lds_r = getattr(routing, "link_down_step", None)
+    if lds_r is not None:
+        lds = np.full(e_tot, np.iinfo(np.int32).max, dtype=np.int32)
+        fabric = np.asarray(eix) >= 0
+        lds[np.asarray(eix)[fabric]] = np.asarray(lds_r,
+                                                  dtype=np.int32)[fabric]
+        out["link_down_step"] = jnp.asarray(lds)       # (e_tot,) int32
+    return out
 
 
 def _flow_uniforms(key, f):
@@ -420,7 +433,17 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
         # the kernel (value-identical to the host-side select it replaced).
         w = send.astype(jnp.float32)
         desired = jnp.minimum(state["rate"], 1.0) * w
-        sent, share = waterfill_step(edges, w, desired, cap, active=send,
+        # Mid-run link death: a link's capacity drops to 0 at its
+        # scheduled step (fair share 0 in both waterfill backends), so
+        # flows on it stall, their slack maxes the flowlet-gap hazard,
+        # and the next re-roll lands on a surviving usable layer.  The
+        # branch is trace-time: pristine fabrics (no "link_down_step"
+        # operand) compile the exact pre-fault program.
+        if "link_down_step" in arrs:
+            cap_t = jnp.where(i < arrs["link_down_step"], cap, 0.0)
+        else:
+            cap_t = cap
+        sent, share = waterfill_step(edges, w, desired, cap_t, active=send,
                                      fair_iters=cfg.fair_iters,
                                      backend=cfg.kernel_backend or None)
 
@@ -624,6 +647,12 @@ def pad_prepared(arrs, static, *, n_flows: int, n_edges: int,
         start=padf(arrs["start"], jnp.inf, 0),
         active_at=padf(arrs["active_at"], np.iinfo(np.int32).max, 0),
     )
+    if "link_down_step" in arrs:
+        # Pad link slots with INT32_MAX (never die); no flow indexes
+        # them, so the value only has to keep the select a no-op.
+        out["link_down_step"] = jnp.pad(
+            arrs["link_down_step"], (0, n_edges - e_tot),
+            constant_values=np.iinfo(np.int32).max)
     return out, (int(n_edges), n_layers, n_steps)
 
 

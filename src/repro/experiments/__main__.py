@@ -3,7 +3,7 @@
   python -m repro.experiments sweep --topos sf,df,ft \\
       --schemes ecmp,letflow,fatpaths --patterns adversarial,shuffle \\
       [--evaluators transport] [--seeds 0] [--quick] [--json out.json] \\
-      [--devices N] [--checkpoint DIR]
+      [--devices N] [--checkpoint DIR] [--filter SUBSTR]
 
   python -m repro.experiments run --topo "sf(q=5)" --scheme fatpaths \\
       --pattern adversarial [--evaluator "transport(steps=1200)"]
@@ -82,19 +82,34 @@ def cmd_sweep(args) -> int:
     session = Session()
     evaluators = _quicken(split_spec_list(args.evaluators), args.quick)
     seeds = [int(s) for s in args.seeds.split(",") if s != ""]
-    grid = dict(topos=split_spec_list(args.topos),
-                routings=split_spec_list(args.schemes),
-                patterns=split_spec_list(args.patterns),
-                evaluators=evaluators, seeds=seeds)
+    cells = session.grid(topos=split_spec_list(args.topos),
+                         routings=split_spec_list(args.schemes),
+                         patterns=split_spec_list(args.patterns),
+                         evaluators=evaluators, seeds=seeds)
+    if args.filter:
+        kept = [c for c in cells if args.filter in c.cell_id]
+        if not kept:
+            print(f"error: --filter {args.filter!r} matches none of the "
+                  f"{len(cells)} grid cell(s):", file=sys.stderr)
+            for c in cells:
+                print(f"  {c.cell_id}", file=sys.stderr)
+            return 2
+        print(f"# --filter {args.filter!r}: {len(kept)} of {len(cells)} "
+              "cell(s)", flush=True)
+        cells = kept
     stream = lambda rr: print(summary_table([rr]), flush=True)  # noqa: E731
     if args.devices is not None or args.checkpoint:
         from .dist_sweep import dist_sweep
         results = dist_sweep(
-            session, session.grid(**grid), devices=args.devices,
+            session, cells, devices=args.devices,
             checkpoint_dir=args.checkpoint or None, callback=stream,
             log=lambda m: print(m, flush=True))
     else:
-        results = session.sweep(callback=stream, **grid)
+        results = []
+        for spec in cells:
+            rr = session.run(spec)
+            stream(rr)
+            results.append(rr)
     builds = session.stats["stack_build"]
     hits = session.stats["stack_hit"]
     print(f"# {len(results)} cells; layer/table stacks built {builds}x, "
@@ -171,6 +186,10 @@ def main(argv=None) -> int:
     sw.add_argument("--patterns", default="adversarial,shuffle")
     sw.add_argument("--evaluators", default="transport")
     sw.add_argument("--seeds", default="0")
+    sw.add_argument("--filter", default="",
+                    help="run only cells whose cell id contains this "
+                         "substring (rc=2 with the cell list when nothing "
+                         "matches)")
     sw.add_argument("--quick", action="store_true")
     sw.add_argument("--json", default="", help="write RunResult list here")
     sw.add_argument("--devices", type=int, default=None,

@@ -27,7 +27,7 @@ meta (flow counts, forwarding-table sizes, ...).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import numpy as np
 
@@ -129,10 +129,17 @@ def topo_spec(obj: SpecLike) -> Spec:
 # -----------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class RoutingBundle:
-    """A built routing stack + the load-balancing mode that drives it."""
+    """A built routing stack + the load-balancing mode that drives it.
+
+    ``failure_meta`` is set by the ``failures(...)`` axis: a JSON-safe
+    summary of the applied damage (dead links/layers, disconnected
+    pairs) that :func:`transport_meta` merges into cell meta — computed
+    on host once at build time, so both sweep engines report identical
+    counts."""
 
     routing: LayeredRouting
     balancing: str            # ecmp | letflow | fatpaths
+    failure_meta: Optional[Dict[str, Any]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -181,6 +188,51 @@ def _minimal(ctx: RoutingCtx, n_layers) -> RoutingBundle:
     """Minimal-only ablation: a rho=1 stack driven by flowlet balancing
     (Fig 11's 'minimal' arm)."""
     return RoutingBundle(_layer_stack(ctx, "rand", n_layers, 1.0), "fatpaths")
+
+
+@ROUTINGS.register("failures", of="fatpaths", rate=0.05, pattern="bernoulli",
+                   mode="repair", down_step=-1, fseed=0)
+def _failures(ctx: RoutingCtx, of, rate, pattern, mode, down_step,
+              fseed) -> RoutingBundle:
+    """Degraded-fabric wrapper: build ``of``'s stack, then kill a seeded
+    set of links (``rate`` x ``pattern`` = bernoulli | switch | blast).
+    ``down_step < 0`` (default) damages the fabric BEFORE the run, with
+    ``mode="repair"`` (next hops re-resolved against the masked
+    adjacency) or ``mode="drop"`` (broken table entries invalidated,
+    no re-convergence); ``down_step >= 0`` keeps pristine tables and
+    kills the links MID-RUN at that scan step (capacity -> 0; flows
+    re-pick among surviving layers at their next flowlet boundary).
+    The mask key depends on the cell seed and ``fseed`` but NOT the
+    scheme, so schemes are compared under identical damage; a realized
+    empty mask (e.g. rate=0) reproduces the undamaged cell bit-for-bit.
+    """
+    from ..core import failures as failures_mod
+
+    inner_spec = Spec.coerce(of)
+    if inner_spec.name == "failures":
+        raise SpecError("failures(of=...) cannot nest another failures spec")
+    fn, kw = ROUTINGS.resolve(inner_spec)
+    inner = fn(ctx, **kw)
+    rate, down_step = float(rate), int(down_step)
+    pattern, mode = str(pattern), str(mode)
+    key = failures_mod.scenario_key(ctx.seed, int(fseed))
+    dead = failures_mod.failure_mask(key, ctx.topo.adj, rate, pattern)
+    ckey = ("failed", ctx.topo_key, ROUTINGS.canonical(inner_spec), rate,
+            pattern, mode, down_step, int(fseed), ctx.seed)
+    if down_step >= 0 and dead.any():
+        lr = ctx.stack(ckey, lambda: dataclasses.replace(
+            inner.routing, build_stats=None,
+            link_down_step=failures_mod.link_down_schedule(dead, down_step)))
+        report = failures_mod.FailureReport(
+            failed_links=int(np.triu(dead, 1).sum()),
+            total_links=int(np.triu(np.asarray(ctx.topo.adj, bool), 1).sum()),
+            rate=rate, pattern=pattern, mode="midrun",
+            dead_layers=0, disconnected_pairs=0, down_step=down_step)
+    else:
+        lr, report = ctx.stack(ckey, lambda: failures_mod.apply_failures(
+            inner.routing, dead, mode=mode, seed=ctx.seed, rate=rate,
+            pattern=pattern))
+    return RoutingBundle(lr, inner.balancing, failure_meta=report.as_meta())
 
 
 # -----------------------------------------------------------------------------
@@ -275,7 +327,8 @@ def _load(topo, seed, level, pattern, flow_size, window, process, shape,
     if not 0.0 < level:
         raise SpecError(f"load level must be > 0 (got {level})")
     bisect = arrivals.bisection_bandwidth(topo, line_rate=float(line_rate),
-                                          samples=int(samples))
+                                          samples=int(samples),
+                                          seed=int(seed))
     rate = level * bisect * float(dt) / float(flow_size)  # flows per step
     n = max(1, int(round(rate * int(window))))
     rounds = max(1, -(-n // max(1, topo.n_endpoints)))
@@ -439,6 +492,12 @@ def transport_meta(cell, cfg, sim_seeds) -> Dict[str, Any]:
     if getattr(wl, "active_step", None) is not None:
         meta["offered_gbs"] = arrivals.offered_gbs(wl.size, wl.active_step,
                                                    cfg.dt)
+    # Fault-injected cells carry the damage summary (dead links/layers,
+    # disconnected pairs) — host ints computed once at build time, so
+    # both engines merge identical values.
+    fm = getattr(cell.bundle, "failure_meta", None)
+    if fm is not None:
+        meta.update(fm)
     return meta
 
 
@@ -489,6 +548,73 @@ def _outcast(session, cell, steps, transport, seeds, dt, flowlet_gap,
     metrics = dict(_fct_metrics(sims), jain_goodput=jain,
                    fct_p99_over_p50=tail, victim_flows=float(data.sum()))
     return metrics, transport_meta(cell, cfg, sim_seeds)
+
+
+@EVALUATORS.register("degradation", rates="0.05:0.15:0.3",
+                     patterns="bernoulli:switch", mode="repair", steps=400,
+                     transport="ndp", seeds=1, dt=10e-6, flowlet_gap=50e-6,
+                     adaptive=1, chunk=64)
+def _degradation(session, cell, rates, patterns, mode, steps, transport,
+                 seeds, dt, flowlet_gap, adaptive, chunk
+                 ) -> Tuple[Dict[str, float], Dict[str, Any]]:
+    """Degradation curves: re-run the cell's routing scheme under
+    escalating seeded link failures — one scenario per (pattern, rate),
+    plus the shared rate-0 baseline — and report absolute and
+    baseline-relative throughput/FCT alongside disconnection counts.
+    ``rates``/``patterns`` are colon-separated lists.  Failure masks are
+    NESTED in rate (see :mod:`repro.core.failures`), so the
+    dead-link/disconnected-pair counts are monotone in rate by
+    construction, and the throughput curve degrades monotonically up to
+    simulation noise."""
+    import types
+
+    rate_list = sorted({float(r) for r in str(rates).split(":") if r})
+    pattern_list = [p for p in str(patterns).split(":") if p]
+    if not rate_list or not pattern_list:
+        raise SpecError("degradation needs non-empty rates and patterns")
+
+    def run_scenario(fspec: Spec):
+        bundle = session.routing(cell.spec.topo, fspec, seed=cell.seed)
+        shim = types.SimpleNamespace(bundle=bundle, seed=cell.seed)
+        cfg, sim_seeds = transport_plan(shim, steps, transport, seeds, dt,
+                                        flowlet_gap, adaptive, chunk)
+        sims = simulate_seeds(cell.topo, bundle.routing, cell.workload,
+                              cfg, sim_seeds)
+        return _fct_metrics(sims), bundle.failure_meta
+
+    of = cell.spec.routing.format()
+    base_m, _ = run_scenario(Spec("failures", (
+        ("of", of), ("rate", 0.0), ("mode", str(mode)))))
+    metrics = {"tput_base": base_m["tput_gbs"],
+               "fct_p99_base": base_m["fct_p99_us"],
+               "finished_base": base_m["finished"]}
+    meta: Dict[str, Any] = {"failure_mode": str(mode),
+                            "failure_rates": rate_list,
+                            "failure_patterns": pattern_list,
+                            "scenarios": {}}
+    base_tput = base_m["tput_gbs"]
+    for pat in pattern_list:
+        discs = []
+        for rate in rate_list:
+            m, fm = run_scenario(Spec("failures", (
+                ("of", of), ("rate", rate), ("pattern", pat),
+                ("mode", str(mode)))))
+            tag = f"{pat}_r{rate:g}"
+            rel = (m["tput_gbs"] / base_tput
+                   if base_tput and base_tput > 0 else float("nan"))
+            metrics.update({
+                f"tput_{tag}": m["tput_gbs"],
+                f"tput_rel_{tag}": rel,
+                f"fct_p99_{tag}": m["fct_p99_us"],
+                f"finished_{tag}": m["finished"],
+                f"disc_{tag}": float(fm["disconnected_pairs"]),
+                f"dead_layers_{tag}": float(fm["dead_layers"]),
+            })
+            discs.append(fm["disconnected_pairs"])
+            meta["scenarios"][tag] = fm
+        metrics[f"monotone_disc_{pat}"] = float(
+            all(a <= b for a, b in zip(discs, discs[1:])))
+    return metrics, meta
 
 
 #: public alias — dist_sweep assembles the same record from batched sims.

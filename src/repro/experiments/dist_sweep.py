@@ -109,7 +109,8 @@ def bucket_signature(cfg, static) -> tuple:
     return (dataclasses.replace(cfg, seed=0), static[1])
 
 
-def padded_signature(cfg, n_layers: int, n_flows: int, e_tot: int) -> tuple:
+def padded_signature(cfg, n_layers: int, n_flows: int, e_tot: int,
+                     link_down: bool = False) -> tuple:
     """The bucketing key actually used to group cells: the compatibility
     key plus the power-of-two size class of the flow count and the
     virtual-link count.  Cells in one bucket batch into one program and
@@ -117,9 +118,12 @@ def padded_signature(cfg, n_layers: int, n_flows: int, e_tot: int) -> tuple:
     with a 10k-flow cell — size classes bound the waste at 2x while
     still merging near-same-size cells across topologies.  Computed from
     the cheap :func:`repro.core.transport.shape_signature` probe, no
-    scan operands needed."""
+    scan operands needed.  ``link_down`` flags cells with a mid-run
+    link-death schedule: their prepared operand tree carries one extra
+    leaf (and the scan compiles an extra capacity select), so they must
+    not stack with pristine cells."""
     return (dataclasses.replace(cfg, seed=0), n_layers,
-            _ceil_pow2(n_flows), _ceil_pow2(e_tot))
+            _ceil_pow2(n_flows), _ceil_pow2(e_tot), bool(link_down))
 
 
 # The compiled bucket programs live at module scope: a fresh
@@ -369,8 +373,11 @@ def dist_sweep(session: Session, cells: List[ExperimentSpec], *,
 
     buckets: Dict[tuple, List[_Work]] = {}
     for w in batched:
+        has_lds = getattr(w.cell.bundle.routing, "link_down_step",
+                          None) is not None
         buckets.setdefault(
-            padded_signature(w.cfg, w.n_layers, w.n_flows, w.e_tot),
+            padded_signature(w.cfg, w.n_layers, w.n_flows, w.e_tot,
+                             link_down=has_lds),
             []).append(w)
 
     # Dispatch ahead of finalize: jax dispatch is async, so small

@@ -78,6 +78,35 @@ def test_run_quick_caps_unpinned_steps(capsys):
     assert d["evaluator"] == "transport(steps=25)"   # pinned steps survive
 
 
+# ---- sweep --filter ----------------------------------------------------------
+def test_sweep_filter_runs_matching_subset(capsys):
+    rc = main(["sweep", "--topos", "clique(k=6)",
+               "--schemes", "ecmp(n=2),fatpaths(n_layers=3)",
+               "--patterns", "uniform",
+               "--evaluators", "transport(steps=30)",
+               "--filter", "fatpaths"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "1 of 2 cell(s)" in out
+    assert "fatpaths" in out
+    assert "# 1 cells" in out               # only the matching cell ran
+
+
+def test_sweep_filter_no_match_exits_2_with_cell_list(capsys):
+    rc = main(["sweep", "--topos", "clique(k=6)",
+               "--schemes", "ecmp(n=2),fatpaths(n_layers=3)",
+               "--patterns", "uniform",
+               "--evaluators", "transport(steps=30)",
+               "--filter", "nosuchcell"])
+    assert rc == 2
+    err = capsys.readouterr().err
+    assert "matches none of the 2 grid cell(s)" in err
+    # the full cell list is printed so the user can fix the filter
+    assert "clique(k=6)/ecmp(n=2)/uniform/transport(steps=30)@s0" in err
+    assert "clique(k=6)/fatpaths(n_layers=3)/uniform/transport(steps=30)@s0" \
+        in err
+
+
 # ---- diff -------------------------------------------------------------------
 @pytest.fixture()
 def artifact(tmp_path):

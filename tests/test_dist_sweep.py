@@ -3,6 +3,7 @@ sequential path, checkpoint resume, stable ordering; the 8-device case
 runs in a subprocess (keeps this session single-device)."""
 
 import dataclasses
+import json
 import os
 import subprocess
 import sys
@@ -14,6 +15,7 @@ import pytest
 from repro.experiments import (ExperimentSpec, RunResult, Session,
                                compare_results, order_results)
 from repro.experiments.dist_sweep import bucket_signature, dist_sweep
+from repro.experiments.results import EXECUTION_META_KEYS
 
 GRID = dict(topos=["clique(k=6)", "star(n=8)"],
             routings=["ecmp(n=2)", "fatpaths(n_layers=3)"],
@@ -151,6 +153,54 @@ def test_checkpoint_resume_skips_completed_cells(tmp_path):
     assert [r.cell_id for r in full] == [c.cell_id for c in cells]
 
 
+FAIL_GRID = dict(
+    topos=["clique(k=6)"],
+    routings=["failures(of=fatpaths(n_layers=3),rate=0.1)",
+              "failures(of=fatpaths(n_layers=3),rate=0.3,mode=drop)",
+              "failures(of=fatpaths(n_layers=3),rate=0.2,down_step=15)",
+              "fatpaths(n_layers=3)"],
+    patterns=["uniform"], evaluators=["transport(steps=40)"], seeds=[0])
+
+
+def _artifact_bytes(results):
+    """The sweep artifact as CI would diff it: execution-dependent
+    fields (walls, build accounting, batch bookkeeping) stripped."""
+    dicts = []
+    for r in results:
+        d = r.to_dict()
+        d.pop("wall_s")
+        for k in EXECUTION_META_KEYS:
+            d["meta"].pop(k, None)
+        dicts.append(d)
+    return json.dumps(dicts, indent=1, sort_keys=True).encode()
+
+
+def test_checkpoint_resume_failure_grid_byte_identical(tmp_path):
+    """Interrupting a degraded-fabric sweep mid-grid and resuming yields
+    an artifact BYTE-identical to the uninterrupted sweep — failure
+    scenarios (static repair, static drop, mid-run death) checkpoint and
+    resume like any other cell."""
+    ckdir = str(tmp_path / "ck")
+    s1 = Session()
+    cells = s1.grid(**FAIL_GRID)
+    part = dist_sweep(s1, cells[:2], devices=1, checkpoint_dir=ckdir)
+    assert len(part) == 2
+
+    s2 = Session()
+    full = dist_sweep(s2, cells, devices=1, checkpoint_dir=ckdir)
+    assert len([r for r in full if r.meta.get("sweep_resumed")]) == 2
+
+    s3 = Session()
+    uninterrupted = dist_sweep(s3, s3.grid(**FAIL_GRID), devices=1)
+    assert compare_results(uninterrupted, full) == []
+    assert _artifact_bytes(full) == _artifact_bytes(uninterrupted)
+    # damage accounting survives the checkpoint round-trip
+    for r in full:
+        if r.routing.startswith("failures"):
+            assert "disconnected_pairs" in r.meta
+            assert "dead_layers" in r.meta
+
+
 def test_checkpoint_ignores_torn_files(tmp_path):
     from repro.ckpt import SweepCheckpoint
 
@@ -214,7 +264,8 @@ _PROG = textwrap.dedent("""
     import jax
     assert jax.device_count() == 8, jax.device_count()
     grid = dict(topos=["clique(k=6)", "star(n=8)"],
-                routings=["ecmp(n=2)", "fatpaths(n_layers=3)"],
+                routings=["ecmp(n=2)", "fatpaths(n_layers=3)",
+                          "failures(of=fatpaths(n_layers=3),rate=0.2,down_step=60)"],
                 patterns=["uniform", "load(level=0.4,window=96)"],
                 evaluators=["transport(steps=200)"],
                 seeds=[0])
@@ -224,8 +275,10 @@ _PROG = textwrap.dedent("""
     diffs = compare_results(seq, d8)
     assert diffs == [], diffs[:5]
     assert any("offered_gbs" in r.meta for r in d8)  # dynamic cells batched
+    assert any("failed_links" in r.meta for r in d8)  # degraded cells batched
     chunks = [r.meta["sweep_chunks"] for r in d8
-              if r.pattern.startswith("uniform")]
+              if r.pattern.startswith("uniform")
+              and not r.routing.startswith("failures")]
     assert all(c < 200 // 64 for c in chunks), chunks   # early exit fired
     print("DIST8_OK")
 """)

@@ -1,0 +1,344 @@
+"""Fault-injection engine: mask determinism/nestedness, repair-vs-drop
+degradation semantics, the rate-0 bit-for-bit contract for every
+transport mode, mid-run link death + flowlet rerouting, the degradation
+evaluator's monotone curves, and engine identity for failure cells."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import repro.core.topology as topo_mod
+from repro.core import failures as F
+from repro.core import transport as TP
+from repro.experiments.dist_sweep import dist_sweep
+from repro.experiments.results import compare_results
+from repro.experiments.session import Session
+
+
+@pytest.fixture(scope="module")
+def session():
+    return Session()
+
+
+@pytest.fixture(scope="module")
+def sf5(session):
+    return session.topology("sf(q=5)")
+
+
+# ---- failure masks ----------------------------------------------------------
+def test_masks_deterministic_symmetric_and_adj_subset(sf5):
+    adj = np.asarray(sf5.adj, bool)
+    key = F.scenario_key(0)
+    for pat in F.PATTERNS:
+        a = F.failure_mask(key, adj, 0.2, pat)
+        b = F.failure_mask(key, adj, 0.2, pat)
+        assert (a == b).all()
+        assert (a == a.T).all()
+        assert not (a & ~adj).any()          # only real links die
+        assert a.any()
+
+
+def test_masks_nested_in_rate(sf5):
+    """Coupled draws: the dead set at a lower rate is a SUBSET of the
+    dead set at any higher rate — degradation curves are monotone in the
+    failure set by construction."""
+    adj = np.asarray(sf5.adj, bool)
+    key = F.scenario_key(1)
+    for pat in F.PATTERNS:
+        prev = np.zeros_like(adj)
+        for rate in (0.0, 0.02, 0.05, 0.1, 0.3, 0.7):
+            dead = F.failure_mask(key, adj, rate, pat)
+            assert (prev <= dead).all(), (pat, rate)
+            prev = dead
+
+
+def test_mask_rate_zero_and_one_extremes(sf5):
+    adj = np.asarray(sf5.adj, bool)
+    key = F.scenario_key(0)
+    assert not F.failure_mask(key, adj, 0.0, "bernoulli").any()
+    dead = F.failure_mask(key, adj, 1.0, "blast")
+    assert (dead == adj).all()               # blast at rate 1 kills all
+
+
+def test_switch_kill_is_per_router(sf5):
+    """A failed router loses ALL incident links — dead links of the
+    switch pattern decompose into full router stars."""
+    adj = np.asarray(sf5.adj, bool)
+    key = F.scenario_key(2)
+    n = adj.shape[0]
+    ur = F.link_uniforms(key, n * n + np.arange(n))
+    down = ur < 0.2
+    dead = F.failure_mask(key, adj, 0.2, "switch")
+    expect = adj & (down[:, None] | down[None, :])
+    assert (dead == expect).all()
+
+
+def test_mask_draws_are_per_link_independent(sf5):
+    """A link's uniform depends only on (key, link id): querying ids one
+    at a time reproduces the batch draw (padding/shape independence)."""
+    adj = np.asarray(sf5.adj, bool)
+    key = F.scenario_key(0)
+    iu, ju = np.nonzero(np.triu(adj, 1))
+    ids = iu.astype(np.int64) * adj.shape[0] + ju
+    batch = F.link_uniforms(key, ids)
+    singles = np.array([F.link_uniforms(key, [i])[0] for i in ids[:16]])
+    assert (batch[:16] == singles).all()
+
+
+def test_scenario_key_varies_with_seed_and_fseed(sf5):
+    adj = np.asarray(sf5.adj, bool)
+    masks = {F.failure_mask(F.scenario_key(s, f), adj, 0.2,
+                            "bernoulli").tobytes()
+             for s in (0, 1) for f in (0, 1)}
+    assert len(masks) == 4                   # all scenarios distinct
+
+
+# ---- apply_failures: repair and drop ---------------------------------------
+@pytest.fixture(scope="module")
+def stack(session):
+    return session.routing("sf(q=5)", "fatpaths(n_layers=5)").routing
+
+
+def test_repair_reresolves_and_stays_loop_free(stack, sf5):
+    dead = F.failure_mask(F.scenario_key(0), np.asarray(sf5.adj, bool),
+                          0.15, "bernoulli")
+    lr, rep = F.apply_failures(stack, dead, mode="repair", rate=0.15)
+    assert lr is not stack
+    assert not (lr.layer_adj & dead[None]).any()     # dead links removed
+    # exhaustive walk over every (layer, s, t) entry
+    report = lr.validate_loop_free(n_samples=10 ** 9)
+    assert report.ok and report.exhaustive
+    assert rep.mode == "repair" and rep.failed_links > 0
+    # repaired next hops only use surviving layer edges
+    L, N, _ = lr.nh.shape
+    for layer in range(L):
+        s, t = np.nonzero(lr.reach[layer] & ~np.eye(N, dtype=bool))
+        nh = lr.nh[layer, s, t]
+        assert lr.layer_adj[layer, s, nh].all()
+
+
+def test_drop_invalidates_broken_entries(stack, sf5):
+    dead = F.failure_mask(F.scenario_key(0), np.asarray(sf5.adj, bool),
+                          0.15, "bernoulli")
+    lr, rep = F.apply_failures(stack, dead, mode="drop", rate=0.15)
+    # surviving entries are unchanged table entries (a sub-table)
+    kept = lr.reach
+    assert (lr.nh[kept] == stack.nh[kept]).all()
+    assert (kept <= stack.reach).all()
+    # no surviving entry's first hop crosses a dead link
+    L, N, _ = lr.nh.shape
+    off = ~np.eye(N, dtype=bool)
+    s, t = np.nonzero((kept & off[None]).any(axis=0))
+    assert rep.disconnected_pairs >= 0
+    for layer in range(L):
+        ss, tt = np.nonzero(kept[layer] & off)
+        assert not dead[ss, lr.nh[layer, ss, tt]].any()
+    assert lr.validate_loop_free(n_samples=10 ** 9).ok
+
+
+def test_drop_counts_dead_layers():
+    """Killing every link of a sparse layer leaves it reach-free and
+    counted in dead_layers."""
+    s = Session()
+    lr = s.routing("sf(q=5)", "fatpaths(n_layers=4,rho=0.3)").routing
+    # kill exactly layer 1's links (undirected closure of its DAG edges)
+    la1 = lr.layer_adj[1]
+    dead = la1 | la1.T
+    assert dead.any()
+    degraded, rep = F.apply_failures(lr, dead, mode="drop")
+    off = ~np.eye(dead.shape[0], dtype=bool)
+    assert not (degraded.reach[1] & off).any()
+    assert rep.dead_layers >= 1
+
+
+def test_disconnection_counts_monotone_in_rate(stack, sf5):
+    adj = np.asarray(sf5.adj, bool)
+    key = F.scenario_key(4)
+    prev_disc, prev_deadl = -1, -1
+    for rate in (0.05, 0.2, 0.5, 0.8):
+        dead = F.failure_mask(key, adj, rate, "switch")
+        _, rep = F.apply_failures(stack, dead, mode="drop", rate=rate)
+        assert rep.disconnected_pairs >= prev_disc
+        assert rep.dead_layers >= prev_deadl
+        prev_disc, prev_deadl = rep.disconnected_pairs, rep.dead_layers
+
+
+def test_empty_mask_returns_same_object(stack):
+    n = stack.nh.shape[1]
+    lr, rep = F.apply_failures(stack, np.zeros((n, n), bool))
+    assert lr is stack                        # bit-for-bit by identity
+    assert rep.failed_links == 0 and rep.disconnected_pairs == 0
+
+
+# ---- rate=0 bit-for-bit through the experiment axis ------------------------
+@pytest.mark.parametrize("transport", ["ndp", "tcp", "dctcp"])
+def test_rate_zero_reproduces_pristine_cell_bitwise(transport):
+    s = Session()
+    ev = f"transport(steps=40,transport={transport})"
+    base = s.run("clique(k=6)", "fatpaths(n_layers=3)", "uniform", ev)
+    wrapped = s.run("clique(k=6)", "failures(of=fatpaths(n_layers=3),rate=0)",
+                    "uniform", ev)
+    assert base.metrics == wrapped.metrics    # exact float equality
+    assert wrapped.meta["failed_links"] == 0
+    assert wrapped.meta["dead_layers"] == 0
+
+
+# ---- mid-run link death ----------------------------------------------------
+def test_link_down_schedule_layout():
+    dead = np.zeros((4, 4), bool)
+    dead[0, 1] = True                         # one direction set ...
+    lds = F.link_down_schedule(dead, 7)
+    assert lds[0, 1] == 7 and lds[1, 0] == 7  # ... both directions die
+    assert lds[2, 3] == np.iinfo(np.int32).max
+
+
+def test_midrun_death_changes_results_only_after_step():
+    """Same fabric, death scheduled beyond the horizon == pristine."""
+    s = Session()
+    topo = s.topology("clique(k=6)")
+    b = s.routing("clique(k=6)", "fatpaths(n_layers=3)")
+    wl = s.workload("clique(k=6)", "uniform")
+    dead = F.failure_mask(F.scenario_key(0), np.asarray(topo.adj, bool),
+                          0.3, "bernoulli")
+    cfg = TP.SimConfig(transport="ndp", balancing="fatpaths", n_steps=80,
+                       seed=0)
+    base = TP.simulate(topo, b.routing, wl, cfg)
+    late = dataclasses.replace(
+        b.routing, link_down_step=F.link_down_schedule(dead, 10_000))
+    mid = dataclasses.replace(
+        b.routing, link_down_step=F.link_down_schedule(dead, 10))
+    r_late = TP.simulate(topo, late, wl, cfg)
+    r_mid = TP.simulate(topo, mid, wl, cfg)
+    assert (r_late.fct[r_late.finished] == base.fct[base.finished]).all()
+    assert float(r_mid.delivered.sum()) < float(base.delivered.sum())
+
+
+def test_midrun_reroute_recovers_goodput_vs_no_reroute():
+    """The acceptance scenario: links die mid-run; flowlet balancing
+    re-picks surviving layers and delivers more than the pinned-layer
+    (no-reroute) control on the SAME degraded fabric."""
+    s = Session()
+    topo = s.topology("clique(k=6)")
+    lr = s.routing("clique(k=6)", "fatpaths(n_layers=5)").routing
+    wl = s.workload("clique(k=6)", "uniform")
+    dead = F.failure_mask(F.scenario_key(3), np.asarray(topo.adj, bool),
+                          0.35, "bernoulli")
+    assert dead.any()
+    hurt = dataclasses.replace(lr,
+                               link_down_step=F.link_down_schedule(dead, 30))
+    out = {}
+    for balancing in ("fatpaths", "ecmp"):    # ecmp = layer pinned forever
+        cfg = TP.SimConfig(transport="ndp", balancing=balancing,
+                           n_steps=400, seed=0)
+        r = TP.simulate(topo, hurt, wl, cfg)
+        out[balancing] = (float(r.delivered.sum()), float(r.finished.mean()))
+    assert out["fatpaths"][0] > out["ecmp"][0]
+    assert out["fatpaths"][1] > out["ecmp"][1]
+
+
+# ---- experiment axis + engines ---------------------------------------------
+FAIL_GRID = dict(
+    topos=["sf(q=5)", "df(p=3)"],
+    routings=["failures(of=fatpaths(n_layers=3),rate=0.05)",
+              "failures(of=fatpaths(n_layers=3),rate=0.15)",
+              "failures(of=fatpaths(n_layers=3),rate=0.3)",
+              "failures(of=ecmp(n=2),rate=0.15,pattern=switch,mode=drop)",
+              "failures(of=letflow(n=2),rate=0.15,pattern=blast)",
+              "failures(of=fatpaths(n_layers=3),rate=0.15,down_step=20)"],
+    patterns=["uniform"],
+    evaluators=["transport(steps=40)"],
+    seeds=[0],
+)
+
+
+def test_failure_grid_engine_identity_and_meta():
+    """Sequential engine == distributed batch engine at rtol 0 for a
+    failure-rate x pattern grid (static repair, static drop, mid-run);
+    every failure cell's meta carries the damage counts."""
+    s1, s2 = Session(), Session()
+    seq = [s1.run(spec) for spec in s1.grid(**FAIL_GRID)]
+    dist = dist_sweep(s2, s2.grid(**FAIL_GRID), devices=1)
+    assert compare_results(seq, dist) == []
+    for r in dist:
+        assert "dead_layers" in r.meta and "disconnected_pairs" in r.meta
+        assert "failed_links" in r.meta
+    # nested masks: damage monotone over the rate ladder (dist results
+    # come back in grid order: topo-major, routings in listed order,
+    # and the first three routings are the fatpaths rate ladder)
+    n_r = len(FAIL_GRID["routings"])
+    for ti, topo in enumerate(FAIL_GRID["topos"]):
+        ladder = dist[ti * n_r: ti * n_r + 3]
+        assert [r.topo for r in ladder] == [ladder[0].topo] * 3
+        fails = [r.meta["failed_links"] for r in ladder]
+        discs = [r.meta["disconnected_pairs"] for r in ladder]
+        assert fails == sorted(fails) and fails[-1] > 0
+        assert discs == sorted(discs)
+
+
+def test_degradation_evaluator_curves():
+    s = Session()
+    rr = s.run("sf(q=5)", "fatpaths(n_layers=3)", "shuffle",
+               "degradation(steps=60,rates=0.1:0.4,patterns=switch)")
+    m = rr.metrics
+    assert m["monotone_disc_switch"] == 1.0
+    assert m["disc_switch_r0.1"] <= m["disc_switch_r0.4"]
+    assert m["finished_switch_r0.4"] <= m["finished_base"]
+    assert rr.meta["scenarios"]["switch_r0.4"]["failure_pattern"] == "switch"
+    # identical spec through a fresh session reproduces the curve exactly
+    rr2 = Session().run("sf(q=5)", "fatpaths(n_layers=3)", "shuffle",
+                        "degradation(steps=60,rates=0.1:0.4,patterns=switch)")
+    assert rr.metrics == rr2.metrics
+
+
+def test_failures_axis_rejects_nesting_and_bad_pattern():
+    from repro.experiments.specs import SpecError
+    s = Session()
+    with pytest.raises(SpecError):
+        s.routing("clique(k=6)", "failures(of=failures(of=ecmp))")
+    with pytest.raises(ValueError):
+        F.failure_mask(F.scenario_key(0), np.eye(4, dtype=bool), 0.5,
+                       "meteor")
+
+
+# ---- loop-freedom witnesses (satellite) ------------------------------------
+def test_validate_loop_free_reports_witnesses():
+    s = Session()
+    lr = s.routing("clique(k=6)", "fatpaths(n_layers=3)").routing
+    # layer 0 is the minimal layer: full off-diagonal reach on a clique,
+    # so the corrupted entries are guaranteed to be checked
+    assert lr.reach[0, 0, 2] and lr.reach[0, 1, 2]
+    bad = dataclasses.replace(lr, nh=lr.nh.copy())
+    # manufacture a 2-cycle: 0 -> 1 -> 0 towards destination 2
+    bad.nh[0, 0, 2] = 1
+    bad.nh[0, 1, 2] = 0
+    report = bad.validate_loop_free(n_samples=10 ** 9, raise_on_fail=False)
+    assert not report
+    assert report.exhaustive
+    assert (0, 0, 2) in report.witnesses and (0, 1, 2) in report.witnesses
+    kinds = dict(zip(report.witnesses, report.kinds))
+    assert kinds[(0, 0, 2)] in ("loop", "hole")
+    with pytest.raises(AssertionError, match=r"l=0"):
+        bad.validate_loop_free(n_samples=10 ** 9)
+
+
+def test_validate_loop_free_exhaustive_beats_sampling():
+    """The old sampler could silently pass when n_samples exceeded the
+    pair count but the draws missed the bad entry; exhaustive mode
+    checks EVERY entry."""
+    s = Session()
+    lr = s.routing("clique(k=3)", "ecmp(n=1)").routing
+    L, N, _ = lr.nh.shape
+    assert 10 ** 9 >= L * N * (N - 1)
+    report = lr.validate_loop_free(n_samples=10 ** 9)
+    assert report.exhaustive
+    assert report.n_checked == int((lr.reach & ~np.eye(N, dtype=bool)).sum())
+    sampled = lr.validate_loop_free(n_samples=5)
+    assert not sampled.exhaustive
+
+
+def test_validate_loop_free_ok_on_all_schemes_returns_report(sf5, session):
+    for scheme in ("fatpaths(n_layers=3)", "ecmp(n=2)"):
+        lr = session.routing("sf(q=5)", scheme).routing
+        report = lr.validate_loop_free(n_samples=100, seed=1)
+        assert report and report.n_checked > 0

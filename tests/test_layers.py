@@ -49,7 +49,20 @@ def test_loop_free_all_schemes():
     topo = slim_fly(5)
     for scheme in SCHEMES:
         lr = L.build_layers(topo, n_layers=4, rho=0.6, scheme=scheme, seed=1)
-        lr.validate_loop_free(n_samples=80, seed=2)
+        report = lr.validate_loop_free(n_samples=80, seed=2)
+        assert report and report.n_checked > 0 and not report.exhaustive
+
+
+def test_loop_check_report_describe():
+    ok = L.LoopCheckReport(ok=True, n_checked=42, exhaustive=True)
+    assert bool(ok) and "exhaustive" in ok.describe()
+    sampled = L.LoopCheckReport(ok=True, n_checked=42, exhaustive=False)
+    assert "sampled" in sampled.describe()
+    bad = L.LoopCheckReport(ok=False, n_checked=42, exhaustive=True,
+                            witnesses=((1, 2, 3),), kinds=("loop",))
+    assert not bad
+    assert "loop@(l=1,s=2,t=3)" in bad.describe()
+    assert "1 bad forwarding entry" in bad.describe()
 
 
 def test_reach_walk_consistency(lr):
