@@ -20,6 +20,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from .common import emit, get_session, timeit
 
 SF = "sf(q=5)"
@@ -130,6 +132,34 @@ def main(quick: bool = False) -> None:
         us = timeit(lambda: TP.simulate(topo, lr, wl_d, cfg_d), n=3, warmup=1)
         emit(f"transport/openloop/{key}", us,
              f"steps={dyn_steps} n_flows={wl_d.n_flows}")
+
+    # ---- loss-recovery lanes (CI-guarded): per-step cost of the PR 8
+    # scan.  transport/recovery/rto arms the stall timer + RTO machine +
+    # ECN lane on a pristine fabric; transport/recovery/escape runs the
+    # full blackhole path (mid-run link death -> in-flight rollback ->
+    # deterministic layer escape).  Horizon full, so both keys isolate
+    # the lane cost against transport/fusedstep/* above; the derived
+    # column records the recovery=off step for the overhead ratio.
+    from repro.core import failures as F
+
+    cfg_r = TP.SimConfig(n_steps=n_steps, recovery="on",
+                         adaptive_horizon=False)
+    us_r = timeit(lambda: TP.simulate(topo, lr, wl, cfg_r), n=3, warmup=1)
+    us_off = timeit(lambda: TP.simulate(
+        topo, lr, wl, dataclasses.replace(cfg_r, recovery="off")),
+        n=1, warmup=1)
+    emit("transport/recovery/rto", _per_step(us_r),
+         f"steps={n_steps} n_flows={wl.n_flows} "
+         f"off_us={us_off.min_us / n_steps:.1f} horizon=full")
+
+    adj = np.asarray(topo.adj, dtype=bool)
+    dead = F.failure_mask(F.scenario_key(1), adj, 0.15, "bernoulli")
+    hurt = dataclasses.replace(
+        lr, link_down_step=F.link_down_schedule(dead, n_steps // 2))
+    us_e = timeit(lambda: TP.simulate(topo, hurt, wl, cfg_r), n=3, warmup=1)
+    emit("transport/recovery/escape", _per_step(us_e),
+         f"steps={n_steps} n_flows={wl.n_flows} "
+         f"rto_us={us_r.min_us / n_steps:.1f} horizon=full")
 
 
 if __name__ == "__main__":

@@ -65,7 +65,8 @@ import sys
 
 GUARDED = [r"^fig12/disjoint/", r"^transport/steptime/",
            r"^transport/fusedstep/", r"^transport/earlyexit/",
-           r"^transport/openloop/", r"^sweep/dist/", r"^failures/"]
+           r"^transport/openloop/", r"^transport/recovery/",
+           r"^sweep/dist/", r"^failures/"]
 CALIBRATE = r"^kernels/pathcount/"
 
 

@@ -14,7 +14,12 @@ sharing some cells reuses exactly the overlap and nothing else.
 
 The store is deliberately schema-light (flat JSON per cell, no
 manifest): concurrent sweeps over disjoint cells may share a directory,
-and a partially-written directory is always safe to resume from.
+and a partially-written directory is always safe to resume from.  Each
+record does carry a ``schema`` version (:data:`SCHEMA`): resuming from
+a directory written by an incompatible repo version raises instead of
+silently reusing records whose metric/meta layout has since changed —
+torn or foreign files are still skipped, only files that parse as
+complete records with the wrong version reject the resume.
 """
 
 from __future__ import annotations
@@ -24,7 +29,15 @@ import json
 import os
 from typing import Dict, Iterator, Optional
 
-__all__ = ["SweepCheckpoint"]
+__all__ = ["SweepCheckpoint", "SchemaMismatch", "SCHEMA"]
+
+#: Per-cell record layout version.  Bump when RunResult serialization
+#: changes incompatibly (metrics/meta structure, cell-id derivation).
+SCHEMA = 1
+
+
+class SchemaMismatch(RuntimeError):
+    """A checkpoint directory holds records from another schema version."""
 
 
 def _cell_path(base: str, cell_id: str) -> str:
@@ -42,7 +55,11 @@ class SweepCheckpoint:
 
     # ---- read side -----------------------------------------------------------
     def load(self) -> Dict[str, dict]:
-        """cell_id -> RunResult dict for every committed cell on disk."""
+        """cell_id -> RunResult dict for every committed cell on disk.
+
+        Raises :class:`SchemaMismatch` if any complete record carries a
+        ``schema`` other than :data:`SCHEMA` — a stale directory from an
+        incompatible repo version must not be silently resumed."""
         out: Dict[str, dict] = {}
         for name in sorted(os.listdir(self.directory)):
             if not (name.startswith("cell_") and name.endswith(".json")):
@@ -50,9 +67,16 @@ class SweepCheckpoint:
             try:
                 with open(os.path.join(self.directory, name)) as f:
                     d = json.load(f)
-                out[d["cell_id"]] = d["result"]
+                cell_id, result = d["cell_id"], d["result"]
             except (json.JSONDecodeError, KeyError, OSError):
                 continue          # torn/foreign file: treat as not done
+            if d.get("schema") != SCHEMA:
+                raise SchemaMismatch(
+                    f"checkpoint directory {self.directory!r} holds record "
+                    f"{name} with schema {d.get('schema')!r} (this version "
+                    f"writes schema {SCHEMA}); delete or move the stale "
+                    "directory to resume")
+            out[cell_id] = result
         self._cache = out
         return dict(out)
 
@@ -80,8 +104,8 @@ class SweepCheckpoint:
         path = _cell_path(self.directory, cell_id)
         tmp = path + ".tmp-" + str(os.getpid())
         with open(tmp, "w") as f:
-            json.dump({"cell_id": cell_id, "result": result_dict}, f,
-                      sort_keys=True)
+            json.dump({"cell_id": cell_id, "schema": SCHEMA,
+                       "result": result_dict}, f, sort_keys=True)
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, path)

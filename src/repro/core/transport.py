@@ -114,6 +114,24 @@ class SimConfig:
     horizon_chunk: int = 64         # scan chunk size (also the PRNG block)
     adaptive_horizon: bool = True   # stop once all flows are done/stuck
     kernel_backend: str = ""        # "" = auto | "pallas" | "ref"
+    # --- loss-recovery lanes (PR 8) -------------------------------------
+    # recovery="off" (default) compiles the exact pre-PR-8 program —
+    # every recovery lane is trace-time gated, so legacy cells reproduce
+    # their results bit-for-bit.  recovery="on" adds: a per-flow stall
+    # timer, a retransmission-timeout state machine with exponential
+    # backoff (deterministic blackhole escape onto the next usable
+    # surviving layer), lost-in-flight rollback on mid-run link death
+    # (ndp pays one trimmed-RTT, tcp a full RTO stall + slow-start
+    # re-entry, dctcp in between), and link-load ECN marking as the
+    # dctcp congestion signal.
+    recovery: str = "off"           # off | on
+    rto_base: int = 16              # initial retransmission timeout (steps)
+    rto_cap: int = 256              # exponential-backoff ceiling (steps)
+    ecn_thresh: float = 0.65        # link claim-utilization ECN mark point
+    # record=1 additionally materialises per-step aggregate lanes
+    # (goodput, stalled-flow count) for the recovery evaluator's
+    # time-to-recover curves; off for every batched sweep cell.
+    record: int = 0
     seed: int = 0
 
 
@@ -128,6 +146,13 @@ class SimResult:
     # (F,) step index at which each flow completed; -1 = still in flight
     # at the horizon (the departure lane of the dynamic-traffic ring).
     depart_step: Optional[np.ndarray] = None
+    # Recovery lanes (PR 8; None unless cfg.recovery/record enabled):
+    # per-flow retransmitted bytes, and the per-step aggregate goodput
+    # (line units) / stalled-flow-count curves the recovery evaluator
+    # turns into time-to-recover metrics.
+    retrans_bytes: Optional[np.ndarray] = None
+    goodput_steps: Optional[np.ndarray] = None
+    stalled_steps: Optional[np.ndarray] = None
 
     @property
     def throughput_per_flow(self) -> np.ndarray:
@@ -343,6 +368,34 @@ def _pick_layers(u, usable, minimal_only_mask):
     return jnp.where(n > 0, pick, 0)
 
 
+def _rto_next(rto, delivered, backoff, rto_base: int, rto_cap: int):
+    """One step of the retransmission-timeout state machine (vectorised
+    over flows): ``backoff`` events (stall-timer expiry, loss on link
+    death) double the RTO up to ``rto_cap``; a successful delivery
+    resets it to ``rto_base`` and WINS over a same-step backoff.  Pure —
+    the scan body and the property tests share this exact function, so
+    'backoff is monotone until delivery and resets on delivery' is
+    asserted on the code that runs."""
+    bumped = jnp.where(backoff, jnp.minimum(rto * 2, rto_cap), rto)
+    return jnp.where(delivered, jnp.asarray(rto_base, rto.dtype), bumped)
+
+
+def _escape_layers(layer, esc_ok):
+    """Deterministic blackhole escape: the next layer (cyclically after
+    the current one) that is pickable AND routes the flow.  ``esc_ok``
+    is the static (F, L) surviving-usable-layer mask; flows with no such
+    layer return their current layer (valid=False).  No PRNG draws —
+    escape is timeout-driven and independent of the flowlet hazard."""
+    n_layers = esc_ok.shape[1]
+    order = (layer[:, None] + 1
+             + jnp.arange(n_layers, dtype=jnp.int32)[None, :]) % n_layers
+    ok = jnp.take_along_axis(esc_ok, order, axis=1)          # (F, L)
+    first = jnp.argmax(ok, axis=1)
+    esc = jnp.take_along_axis(order, first[:, None], axis=1)[:, 0]
+    valid = ok.any(axis=1)
+    return jnp.where(valid, esc, layer).astype(jnp.int32), valid
+
+
 def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
     e_tot, n_layers, n_steps = static
     f = arrs["size"].shape[0]
@@ -352,6 +405,17 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
     reroute = cfg.balancing in ("letflow", "fatpaths")
     chunk = max(1, int(cfg.horizon_chunk))
     n_full, rem = divmod(n_steps, chunk)
+    # Loss-recovery lanes (PR 8) — ALL trace-time gated: with
+    # recovery="off" and record=0 every branch below compiles away and
+    # the program is identical to the pre-PR-8 scan (test-asserted
+    # bitwise per transport mode).
+    recovery_on = str(cfg.recovery).lower() in ("on", "1", "true")
+    record_on = bool(int(cfg.record))
+    has_lds = "link_down_step" in arrs
+    # Link-load ECN marking replaces the pure share-vs-rate congested
+    # bool as the dctcp signal only under recovery (tcp keeps the
+    # legacy signal in both modes).
+    want_util = recovery_on and cfg.transport == "dctcp"
 
     k_init, k_scan = jax.random.split(key0)
     layer0 = _pick_layers(_flow_uniforms(k_init, f)[:, 0], arrs["usable"],
@@ -382,6 +446,17 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
         # chunks cannot have written it.
         depart_step=jnp.full(f, -1, dtype=jnp.int32),
     )
+    if recovery_on:
+        # stall: consecutive ~zero-share steps; rto: current timeout
+        # (steps, doubles on backoff up to rto_cap); blocked_until: the
+        # step before which a loss-penalised flow may not send;
+        # retrans_acc: lost-in-flight line-units that had to be resent.
+        init.update(
+            stall=jnp.zeros(f, dtype=jnp.int32),
+            rto=jnp.full(f, int(cfg.rto_base), dtype=jnp.int32),
+            blocked_until=jnp.zeros(f, dtype=jnp.int32),
+            retrans_acc=jnp.zeros(f, dtype=jnp.float32),
+        )
 
     cap = jnp.ones(e_tot, dtype=jnp.float32)           # capacities in line units
     frows = jnp.arange(f)
@@ -403,8 +478,12 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
         pickable = jnp.where(pickable.any(axis=1, keepdims=True), pickable,
                              (jnp.arange(n_layers) == 0)[None, :])
         pick_routable = jnp.any(pickable & arrs["routed"].T, axis=1)  # (F,)
+        # Static escape-candidate mask for the RTO blackhole escape:
+        # layers a flow may pick that actually route it.
+        esc_ok = pickable & arrs["routed"].T                           # (F, L)
     else:
         pick_routable = jnp.zeros(f, dtype=bool)
+        esc_ok = None
 
     def step(state, xs):
         if reroute:
@@ -426,7 +505,15 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
         edges = g[:, :n_slots]
         routed = g[:, n_slots] > 0
         n_hops = g[:, n_slots + 1].astype(jnp.float32)
-        send = active & routed
+        if recovery_on:
+            # Loss penalties stall the sender: a flow blocked by its
+            # transport's loss response (RTO stall for tcp, a fraction
+            # of it for dctcp, one trimmed-RTT for ndp) sends nothing
+            # until its blocked_until step.
+            unblocked = i >= state["blocked_until"]
+            send = active & routed & unblocked
+        else:
+            send = active & routed
 
         # --- fused max-min water-filling (feasible by construction) -------
         # The active lane masks non-sending rows to the trash link inside
@@ -443,12 +530,39 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
             cap_t = jnp.where(i < arrs["link_down_step"], cap, 0.0)
         else:
             cap_t = cap
-        sent, share = waterfill_step(edges, w, desired, cap_t, active=send,
-                                     fair_iters=cfg.fair_iters,
-                                     backend=cfg.kernel_backend or None)
+        wf = waterfill_step(edges, w, desired, cap_t, active=send,
+                            fair_iters=cfg.fair_iters,
+                            backend=cfg.kernel_backend or None,
+                            want_util=want_util)
+        if want_util:
+            sent, share, util = wf
+        else:
+            sent, share = wf
+
+        # Lost-in-flight accounting on mid-run link death: at the step a
+        # path edge dies, a bandwidth-delay-product estimate of the
+        # bytes in the pipe (rate x path latency in steps, capped by
+        # what was actually sent) is rolled back from sent_acc into
+        # remaining — those bytes MUST be retransmitted.  The dying
+        # link's capacity is already 0 this step, so the hit flow
+        # delivered nothing concurrently.
+        if recovery_on and has_lds:
+            lds_g = arrs["link_down_step"][
+                jnp.where(edges >= 0, edges, e_tot - 1)]         # (F, S)
+            hit = active & routed & jnp.any(lds_g == i, axis=1)
+            pipe_steps = (n_hops * jnp.float32(cfg.link_latency)
+                          + jnp.float32(cfg.sw_latency)) / jnp.float32(cfg.dt)
+            lost = jnp.where(
+                hit, jnp.minimum(state["sent_acc"],
+                                 state["rate"] * pipe_steps), 0.0)
+        else:
+            hit = None
+            lost = 0.0
 
         delivered = sent * line_bytes
         new_remaining = jnp.maximum(state["remaining"] - delivered * w, 0.0)
+        if recovery_on and has_lds:
+            new_remaining = new_remaining + lost * line_bytes
         newly_done = (new_remaining <= 0) & ~done & started
         # FCT is NOT accumulated in-scan: it is derived on the host from
         # the integer depart/hops lanes (:func:`_to_result`).  A float
@@ -463,6 +577,21 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
         # --- transport rate dynamics --------------------------------------
         if cfg.transport == "ndp":
             rate = jnp.ones(f, dtype=jnp.float32)
+        elif cfg.transport == "dctcp" and recovery_on:
+            # ECN: mark proportionally to the worst link claim
+            # utilization on the path — a DCTCP-style graded decrease
+            # (full dctcp_md multiplicative decrease at saturation)
+            # instead of the binary share-vs-rate signal.  A dead link
+            # reports huge utilization, so blackholed flows mark at
+            # full strength.
+            denom = max(1.0 - float(cfg.ecn_thresh), 1e-6)
+            frac = jnp.clip((util - cfg.ecn_thresh) / denom, 0.0, 1.0)
+            slow_start = state["rate"] < 0.5
+            up = jnp.where(slow_start, state["rate"] * 2.0,
+                           state["rate"] + cfg.tcp_ai)
+            down = state["rate"] * (1.0 - (1.0 - cfg.dctcp_md) * frac)
+            rate = jnp.where(frac > 0, jnp.maximum(down, cfg.tcp_init),
+                             jnp.minimum(up, 1.0))
         else:
             congested = share < state["rate"] * 0.98
             md = cfg.tcp_md if cfg.transport == "tcp" else cfg.dctcp_md
@@ -471,6 +600,41 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
                            state["rate"] + cfg.tcp_ai)
             rate = jnp.where(congested, jnp.maximum(share * md, cfg.tcp_init),
                              jnp.minimum(up, 1.0))
+
+        # --- RTO state machine + loss penalties (recovery lanes) ----------
+        if recovery_on:
+            progress = sent > 1e-6
+            # Stall timer: consecutive steps an unblocked, wanting flow
+            # got ~zero share (blackholed on a dead edge, starved, or
+            # unrouted on its current layer).
+            stalled = active & unblocked & ~progress
+            stall_new = jnp.where(stalled, state["stall"] + 1, 0)
+            expire = stalled & (stall_new >= state["rto"])
+            backoff = expire
+            blocked = state["blocked_until"]
+            if has_lds:
+                i32 = i.astype(jnp.int32)
+                if cfg.transport == "ndp":
+                    # Trimming: loss detected in one trimmed-RTT, no
+                    # timeout and no backoff (headers always arrive).
+                    pen = jnp.int32(1)
+                elif cfg.transport == "tcp":
+                    # Full RTO stall + slow-start re-entry.
+                    pen = state["rto"]
+                    rate = jnp.where(hit, jnp.float32(cfg.tcp_init), rate)
+                else:
+                    # dctcp: a fraction of the RTO + gentle decrease.
+                    pen = jnp.maximum(state["rto"] // 4, 1)
+                    rate = jnp.where(
+                        hit, jnp.maximum(state["rate"] * cfg.dctcp_md,
+                                         cfg.tcp_init), rate)
+                blocked = jnp.where(hit, i32 + pen, blocked)
+                if cfg.transport != "ndp":
+                    backoff = backoff | hit
+            rto = _rto_next(state["rto"], progress, backoff,
+                            int(cfg.rto_base), int(cfg.rto_cap))
+            stall_out = jnp.where(expire, 0, stall_new)
+            retrans = state["retrans_acc"] + (lost if has_lds else 0.0)
 
         # --- flowlet elasticity + layer re-roll -----------------------------
         if reroute:
@@ -482,13 +646,51 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
             layer = jnp.where(roll & active, newpick, state["layer"])
         else:
             layer = state["layer"]
+        if recovery_on and reroute:
+            # Blackhole escape: when the stall timer crosses the RTO the
+            # flow DETERMINISTICALLY re-picks the next usable layer that
+            # routes it — timeout-driven, independent of the stochastic
+            # flowlet hazard, and consuming no PRNG draws (so the
+            # hazard's (key, flow, step) stream is untouched).  Without
+            # re-routing (ecmp) the layer stays pinned: the
+            # never-recovers control.
+            esc_layer, esc_valid = _escape_layers(state["layer"], esc_ok)
+            layer = jnp.where(expire & esc_valid, esc_layer, layer)
 
         out = dict(remaining=new_remaining, layer=layer, rate=rate,
-                   hops=hops, sent_acc=state["sent_acc"] + sent,
-                   w_acc=state["w_acc"] + w, depart_step=depart)
-        return out, None
+                   hops=hops, depart_step=depart, w_acc=state["w_acc"] + w)
+        if recovery_on:
+            out.update(
+                sent_acc=state["sent_acc"] + sent
+                - (lost if has_lds else 0.0),
+                stall=stall_out, rto=rto, blocked_until=blocked,
+                retrans_acc=retrans)
+        else:
+            out["sent_acc"] = state["sent_acc"] + sent
+        if record_on:
+            # Per-step aggregates for the recovery evaluator's curves.
+            # f32 device sums are fine HERE: the record lane only runs
+            # on the sequential evaluator path (both engines execute
+            # this same unpadded program), never in padded batches.
+            ys = dict(
+                goodput=jnp.sum(sent * w),
+                stalled=jnp.sum((active & (sent <= 1e-6))
+                                .astype(jnp.float32)))
+        else:
+            ys = None
+        return out, ys
 
-    def run_chunk(state, c, length: int):
+    # Record buffers ride the while-loop carry OUTSIDE the per-step scan
+    # carry (they are written chunk-at-a-time via dynamic_update_slice).
+    # bufs0 is None when record=0 — an empty pytree node, so the carry
+    # structure (and the compiled program) is unchanged from pre-PR-8.
+    if record_on:
+        bufs0 = dict(goodput_t=jnp.zeros(n_steps, dtype=jnp.float32),
+                     stalled_t=jnp.zeros(n_steps, dtype=jnp.float32))
+    else:
+        bufs0 = None
+
+    def run_chunk(state, bufs, c, length: int):
         steps_i = c * chunk + jnp.arange(length)
         if reroute:
             # Full (chunk, F, 2) block even for the tail: a step's draws
@@ -497,8 +699,15 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
             xs = (steps_i, u)
         else:
             xs = steps_i
-        state, _ = jax.lax.scan(step, state, xs)
-        return state
+        state, ys = jax.lax.scan(step, state, xs)
+        if record_on:
+            bufs = {
+                "goodput_t": jax.lax.dynamic_update_slice(
+                    bufs["goodput_t"], ys["goodput"], (c * chunk,)),
+                "stalled_t": jax.lax.dynamic_update_slice(
+                    bufs["stalled_t"], ys["stalled"], (c * chunk,)),
+            }
+        return state, bufs
 
     def exhausted(state):
         # Pending arrivals block early exit for free: a flow whose
@@ -518,28 +727,32 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
     # a stuck flow's layer re-rolls) — none of them feed SimResult.
     if n_full:
         def w_cond(carry):
-            state, c = carry
+            state, _bufs, c = carry
             go = c < n_full
             if cfg.adaptive_horizon:
                 go = go & ~exhausted(state)
             return go
 
         def w_body(carry):
-            state, c = carry
-            return run_chunk(state, c, chunk), c + 1
+            state, bufs, c = carry
+            state, bufs = run_chunk(state, bufs, c, chunk)
+            return state, bufs, c + 1
 
-        state, c_run = jax.lax.while_loop(w_cond, w_body,
-                                          (init, jnp.int32(0)))
+        state, bufs, c_run = jax.lax.while_loop(w_cond, w_body,
+                                                (init, bufs0, jnp.int32(0)))
     else:
-        state, c_run = init, jnp.int32(0)
+        state, bufs, c_run = init, bufs0, jnp.int32(0)
     if rem:
         # The tail rides chunk index n_full unconditionally (running it
         # after an early exit is the same no-op as the skipped chunks).
-        state = run_chunk(state, n_full, rem)
+        state, bufs = run_chunk(state, bufs, n_full, rem)
     # horizon_chunks is execution bookkeeping (how far the while_loop
     # ran), never a result: downstream result assembly ignores it and
     # the sweep engines report it as execution meta only.
-    return dict(state, horizon_chunks=c_run)
+    out = dict(state, horizon_chunks=c_run)
+    if record_on:
+        out.update(bufs)
+    return out
 
 
 _run_scan = functools.partial(jax.jit,
@@ -577,6 +790,9 @@ def _to_result(size: np.ndarray, final, cfg: SimConfig,
     fct = ((dep.astype(np.float32) + f32(1.0)) * f32(cfg.dt) - start32
            + hops * f32(cfg.link_latency) + f32(cfg.sw_latency))
     fct = np.where(dep >= 0, fct, np.float32(np.nan))
+    # Recovery/record lanes are optional scan outputs (absent = None).
+    line_bytes = f32(cfg.line_rate * cfg.dt)
+    ret = final.get("retrans_acc")
     return SimResult(
         fct=fct,
         delivered=size - remaining,
@@ -585,6 +801,12 @@ def _to_result(size: np.ndarray, final, cfg: SimConfig,
         link_util_mean=sent / max(want, 1.0),
         config=cfg,
         depart_step=dep,
+        retrans_bytes=(None if ret is None
+                       else np.asarray(ret) * line_bytes),
+        goodput_steps=(None if "goodput_t" not in final
+                       else np.asarray(final["goodput_t"])),
+        stalled_steps=(None if "stalled_t" not in final
+                       else np.asarray(final["stalled_t"])),
     )
 
 
@@ -664,7 +886,9 @@ def batch_result(size: np.ndarray, final, cfg: SimConfig,
     ``start`` is the cell's (unpadded) flow start times; omit for
     all-start-at-zero workloads."""
     per_flow = ("remaining", "layer", "rate", "hops",
-                "sent_acc", "w_acc", "depart_step")
+                "sent_acc", "w_acc", "depart_step",
+                # recovery lanes (present only when cfg.recovery is on)
+                "stall", "rto", "blocked_until", "retrans_acc")
     if n_flows is not None:
         final = {k: (v[:n_flows] if k in per_flow else v)
                  for k, v in final.items()}

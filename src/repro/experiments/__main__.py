@@ -3,7 +3,8 @@
   python -m repro.experiments sweep --topos sf,df,ft \\
       --schemes ecmp,letflow,fatpaths --patterns adversarial,shuffle \\
       [--evaluators transport] [--seeds 0] [--quick] [--json out.json] \\
-      [--devices N] [--checkpoint DIR] [--filter SUBSTR]
+      [--devices N] [--checkpoint DIR] [--filter SUBSTR] \\
+      [--cell-timeout-s N]
 
   python -m repro.experiments run --topo "sf(q=5)" --scheme fatpaths \\
       --pattern adversarial [--evaluator "transport(steps=1200)"]
@@ -73,6 +74,74 @@ def _quicken(evaluators, quick: bool):
     return out
 
 
+def _watchdog_sweep(session, cells, args, stream) -> int:
+    """Sequential sweep with a per-cell wall-clock watchdog
+    (``--cell-timeout-s``).  Each cell runs in a worker thread; a cell
+    exceeding the budget is recorded as failed-with-timeout (empty
+    metrics, structured ``error`` meta) and the sweep moves on.  The
+    stuck computation cannot be killed — its executor is abandoned and
+    a fresh one started — so a pathological cell costs one zombie
+    thread, not the artifact.  Timed-out cells are NEVER checkpointed:
+    a checkpoint resume re-attempts exactly them.  Exit code is 0 when
+    at least one cell succeeded, 1 when none did."""
+    import concurrent.futures as cf
+    import dataclasses
+
+    from ..ckpt.sweep import SweepCheckpoint
+    from .results import RunResult, results_to_json
+
+    timeout = float(args.cell_timeout_s)
+    ckpt = SweepCheckpoint(args.checkpoint) if args.checkpoint else None
+    results = []
+    n_ok = n_timeout = 0
+    ex = cf.ThreadPoolExecutor(max_workers=1)
+    for spec in cells:
+        if ckpt is not None:
+            prev = ckpt.get(spec.cell_id)
+            if prev is not None:
+                rr = dataclasses.replace(
+                    RunResult.from_dict(prev),
+                    meta={**RunResult.from_dict(prev).meta,
+                          "sweep_resumed": True})
+                stream(rr)
+                results.append(rr)
+                n_ok += 1
+                continue
+        fut = ex.submit(session.run, spec)
+        try:
+            rr = fut.result(timeout=timeout)
+        except cf.TimeoutError:
+            fut.cancel()
+            ex.shutdown(wait=False)
+            ex = cf.ThreadPoolExecutor(max_workers=1)
+            print(f"# cell {spec.cell_id} exceeded --cell-timeout-s "
+                  f"{timeout:g}; marked failed-with-timeout", flush=True)
+            rr = RunResult(
+                topo=spec.topo.format(), routing=spec.routing.format(),
+                pattern=spec.pattern.format(),
+                evaluator=spec.evaluator.format(), seed=spec.seed,
+                metrics={},
+                meta={"error": {"type": "timeout",
+                                "timeout_s": timeout}},
+                wall_s=timeout)
+            n_timeout += 1
+            results.append(rr)
+            continue
+        if ckpt is not None:
+            ckpt.put(rr.cell_id, rr.to_dict())
+        stream(rr)
+        results.append(rr)
+        n_ok += 1
+    ex.shutdown(wait=False)
+    print(f"# {len(results)} cells; {n_ok} succeeded, "
+          f"{n_timeout} timed out", flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(results_to_json(results) + "\n")
+        print(f"# wrote {len(results)} RunResults to {args.json}")
+    return 0 if (n_ok > 0 or not cells) else 1
+
+
 def cmd_sweep(args) -> int:
     _ensure_devices(args.devices)
     from .results import results_to_json, summary_table
@@ -98,6 +167,12 @@ def cmd_sweep(args) -> int:
               "cell(s)", flush=True)
         cells = kept
     stream = lambda rr: print(summary_table([rr]), flush=True)  # noqa: E731
+    if args.cell_timeout_s is not None:
+        if args.devices is not None:
+            print("error: --cell-timeout-s is a sequential-engine "
+                  "watchdog; drop --devices", file=sys.stderr)
+            return 2
+        return _watchdog_sweep(session, cells, args, stream)
     if args.devices is not None or args.checkpoint:
         from .dist_sweep import dist_sweep
         results = dist_sweep(
@@ -198,6 +273,15 @@ def main(argv=None) -> int:
                          "configures jax)")
     sw.add_argument("--checkpoint", default="",
                     help="resumable sweep: per-cell checkpoint directory")
+    sw.add_argument("--cell-timeout-s", type=float, default=None,
+                    dest="cell_timeout_s",
+                    help="sequential-engine watchdog: a cell exceeding "
+                         "this wall-clock budget is marked "
+                         "failed-with-timeout (structured error meta) and "
+                         "the sweep continues; rc 0 if any cell "
+                         "succeeded.  Timed-out cells are not "
+                         "checkpointed, so --checkpoint resume "
+                         "re-attempts them")
     sw.set_defaults(fn=cmd_sweep)
 
     rn = sub.add_parser("run", help="run a single cell")

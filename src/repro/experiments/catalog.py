@@ -450,12 +450,23 @@ def _fct_metrics(sims) -> Dict[str, float]:
         tput_gbs = float(np.nanmean(tput) / 1e9)
     else:
         tput_gbs = float("nan")
-    return {"fct_p50_us": p50, "fct_p99_us": p99, "fct_mean_us": mean,
-            "finished": finished, "tput_gbs": tput_gbs, "link_util": util}
+    out = {"fct_p50_us": p50, "fct_p99_us": p99, "fct_mean_us": mean,
+           "finished": finished, "tput_gbs": tput_gbs, "link_util": util}
+    # Recovery cells additionally report retransmitted bytes.  Computed
+    # HERE (host float64 over per-flow accumulators) so the sequential
+    # evaluator and dist_sweep — which calls this same function on
+    # batch_result sims — emit identical metric dicts.
+    rb = [r.retrans_bytes for r in sims if r.retrans_bytes is not None]
+    if rb:
+        out["retrans_mb"] = float(
+            np.mean([np.asarray(b, np.float64).sum() for b in rb]) / 2 ** 20)
+    return out
 
 
 def transport_plan(cell, steps, transport, seeds, dt, flowlet_gap,
-                   adaptive=1, chunk=64) -> Tuple[SimConfig, list]:
+                   adaptive=1, chunk=64, recovery="off", rto_base=16,
+                   rto_cap=256, ecn_thresh=0.65,
+                   record=0) -> Tuple[SimConfig, list]:
     """The transport evaluator's execution plan for one cell:
     ``(SimConfig, sim_seeds)``.  Shared by the in-process evaluator below
     and by :mod:`repro.experiments.dist_sweep`, which runs the same plan
@@ -468,14 +479,21 @@ def transport_plan(cell, steps, transport, seeds, dt, flowlet_gap,
     changing any spec string: the nightly CI job uses that to prove an
     early-exit sweep artifact equals a full-horizon one cell-for-cell.
     ``chunk`` is the scan chunk size; unlike ``adaptive`` it feeds the
-    PRNG block layout, so changing it changes the simulated draws."""
+    PRNG block layout, so changing it changes the simulated draws.
+
+    ``recovery``/``rto_base``/``rto_cap``/``ecn_thresh``/``record`` are
+    the PR 8 loss-recovery lanes (see :class:`SimConfig`); they are part
+    of the jit-static config, so recovery cells bucket separately from
+    recovery-off cells in the distributed engine automatically."""
     import os
     adaptive_on = bool(int(adaptive)) and \
         os.environ.get("REPRO_FULL_HORIZON", "") != "1"
     cfg = SimConfig(transport=transport, balancing=cell.bundle.balancing,
                     n_steps=int(steps), dt=dt, flowlet_gap=flowlet_gap,
                     horizon_chunk=int(chunk), adaptive_horizon=adaptive_on,
-                    seed=cell.seed)
+                    recovery=str(recovery), rto_base=int(rto_base),
+                    rto_cap=int(rto_cap), ecn_thresh=float(ecn_thresh),
+                    record=int(record), seed=cell.seed)
     sim_seeds = [cell.seed + 1000 * i for i in range(max(1, int(seeds)))]
     return cfg, sim_seeds
 
@@ -502,13 +520,20 @@ def transport_meta(cell, cfg, sim_seeds) -> Dict[str, Any]:
 
 
 @EVALUATORS.register("transport", steps=2000, transport="ndp", seeds=1,
-                     dt=10e-6, flowlet_gap=50e-6, adaptive=1, chunk=64)
+                     dt=10e-6, flowlet_gap=50e-6, adaptive=1, chunk=64,
+                     recovery="off", rto_base=16, rto_cap=256,
+                     ecn_thresh=0.65)
 def _transport(session, cell, steps, transport, seeds, dt, flowlet_gap,
-               adaptive, chunk) -> Tuple[Dict[str, float], Dict[str, Any]]:
+               adaptive, chunk, recovery, rto_base, rto_cap,
+               ecn_thresh) -> Tuple[Dict[str, float], Dict[str, Any]]:
     """Flow-level simulation (§7); ``seeds`` > 1 batches a sim-seed sweep
-    through one vmapped scan instead of a Python loop."""
+    through one vmapped scan instead of a Python loop.  ``recovery=on``
+    arms the loss-recovery lanes (RTO + blackhole escape + lost-in-flight
+    accounting); the default compiles the identical recovery-free
+    program."""
     cfg, sim_seeds = transport_plan(cell, steps, transport, seeds, dt,
-                                    flowlet_gap, adaptive, chunk)
+                                    flowlet_gap, adaptive, chunk, recovery,
+                                    rto_base, rto_cap, ecn_thresh)
     sims = simulate_seeds(cell.topo, cell.bundle.routing, cell.workload,
                           cfg, sim_seeds)
     return _fct_metrics(sims), transport_meta(cell, cfg, sim_seeds)
@@ -614,6 +639,79 @@ def _degradation(session, cell, rates, patterns, mode, steps, transport,
             meta["scenarios"][tag] = fm
         metrics[f"monotone_disc_{pat}"] = float(
             all(a <= b for a, b in zip(discs, discs[1:])))
+    return metrics, meta
+
+
+@EVALUATORS.register("recovery", steps=400, transport="ndp", seeds=1,
+                     dt=10e-6, flowlet_gap=50e-6, chunk=64, rto_base=16,
+                     rto_cap=256, ecn_thresh=0.65, eps=0.05, window=16,
+                     curve_points=64)
+def _recovery(session, cell, steps, transport, seeds, dt, flowlet_gap,
+              chunk, rto_base, rto_cap, ecn_thresh, eps, window,
+              curve_points) -> Tuple[Dict[str, float], Dict[str, Any]]:
+    """Time-to-recover under a mid-run fault: run the cell with the
+    recovery lanes armed and the per-step record lane on (full horizon —
+    the trajectory must be exact), then measure how long aggregate
+    goodput takes to climb back within ``eps`` of its pre-fault plateau
+    after the ``failures(down_step=...)`` link death.
+
+    Reported metrics: ``ttr_steps`` (steps from the fault until the
+    trailing ``window``-step mean goodput re-enters the plateau band;
+    NaN if it never does inside the horizon), ``recovered`` (0/1),
+    ``dip_frac`` (deepest post-fault goodput dip relative to plateau),
+    ``plateau_goodput`` (line-rate units), ``stalled_peak`` (worst
+    post-fault stalled-flow count) — plus the standard FCT metrics
+    (which include ``retrans_mb``, the retransmitted-byte total).  Meta
+    carries the downsampled goodput/stalled trajectories (host float64
+    means over seeds, so both sweep engines serialize identical curves).
+    Composed without a mid-run fault the cell is trivially recovered
+    (``ttr_steps=0``); a layer-pinned scheme (ecmp) over a blackhole
+    never re-enters the band — the acceptance control."""
+    cfg, sim_seeds = transport_plan(
+        cell, steps, transport, seeds, dt, flowlet_gap, adaptive=0,
+        chunk=chunk, recovery="on", rto_base=rto_base, rto_cap=rto_cap,
+        ecn_thresh=ecn_thresh, record=1)
+    sims = simulate_seeds(cell.topo, cell.bundle.routing, cell.workload,
+                          cfg, sim_seeds)
+    g = np.mean([np.asarray(r.goodput_steps, np.float64) for r in sims],
+                axis=0)
+    st = np.mean([np.asarray(r.stalled_steps, np.float64) for r in sims],
+                 axis=0)
+    n = len(g)
+    window = max(1, int(window))
+    eps = float(eps)
+    fm = getattr(cell.bundle, "failure_meta", None) or {}
+    down = int(fm.get("link_down_step", -1))
+    if down < 1 or down >= n:
+        plateau = float(g[-window:].mean()) if n else float("nan")
+        ttr, recovered, dip = 0.0, 1.0, 0.0
+    else:
+        plateau = float(g[max(0, down - window):down].mean())
+        post = g[down:]
+        # Trailing moving mean over the POST-fault segment only (early
+        # windows are short) — pre-fault steps must not inflate it.
+        csum = np.concatenate([[0.0], np.cumsum(post)])
+        lo = np.maximum(0, np.arange(1, len(post) + 1) - window)
+        sm = (csum[1:] - csum[lo]) / (np.arange(1, len(post) + 1) - lo)
+        target = (1.0 - eps) * plateau
+        hits = np.nonzero(sm >= target)[0]
+        recovered = 1.0 if hits.size else 0.0
+        ttr = float(hits[0]) if hits.size else float("nan")
+        dip = (float((plateau - post.min()) / plateau)
+               if plateau > 0 else float("nan"))
+    metrics = dict(
+        _fct_metrics(sims), ttr_steps=ttr, recovered=recovered,
+        dip_frac=dip, plateau_goodput=plateau,
+        stalled_peak=float(st[down:].max() if 0 <= down < n else st.max()))
+    idx = np.unique(np.linspace(0, max(0, n - 1),
+                                min(int(curve_points), max(1, n)))
+                    .round().astype(int))
+    meta = dict(transport_meta(cell, cfg, sim_seeds),
+                recovery_eps=eps, recovery_window=window,
+                rto_base=int(rto_base), rto_cap=int(rto_cap),
+                curve_steps=[int(i) for i in idx],
+                goodput_curve=[float(g[i]) for i in idx],
+                stalled_curve=[float(st[i]) for i in idx])
     return metrics, meta
 
 

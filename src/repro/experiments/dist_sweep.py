@@ -45,6 +45,15 @@ and a re-run loads completed cells instead of re-simulating them.
 Non-transport evaluators (``mat``, ``fabric``) fall back to the
 sequential path within the same sweep and share its checkpointing.
 
+Graceful degradation (PR 8): a bucket whose compile or execution fails
+— a Pallas lowering/runtime error on an exotic shape, say — is retried
+ONCE with every cell forced onto the ``ref`` kernel backend; if the
+retry fails too, the bucket's cells are emitted with empty metrics and
+a structured ``error`` meta field instead of poisoning the whole
+artifact.  Cells whose simulation state comes back non-finite (inf/NaN
+delivered bytes) are quarantined the same way.  Error cells are NEVER
+checkpointed, so a later resume re-attempts exactly them.
+
 Emission is streamed (``callback`` fires as each cell completes,
 bucket-by-bucket) but the returned list — and therefore every sweep
 artifact — is in canonical grid order, independent of execution order
@@ -56,7 +65,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -331,8 +340,11 @@ def dist_sweep(session: Session, cells: List[ExperimentSpec], *,
     ckpt = SweepCheckpoint(checkpoint_dir) if checkpoint_dir else None
     say = log if log is not None else (lambda _msg: None)
 
-    def emit(rr: RunResult, done_via_ckpt: bool = False) -> RunResult:
-        if ckpt is not None and not done_via_ckpt:
+    def emit(rr: RunResult, done_via_ckpt: bool = False,
+             persist: bool = True) -> RunResult:
+        # Error/quarantined cells pass persist=False: they must NOT be
+        # checkpointed, so a checkpoint resume re-attempts them.
+        if ckpt is not None and not done_via_ckpt and persist:
             ckpt.put(rr.cell_id, rr.to_dict())
         if callback is not None:
             callback(rr)
@@ -393,11 +405,64 @@ def dist_sweep(session: Session, cells: List[ExperimentSpec], *,
     in_flight: List[tuple] = []
     n_buckets = n_elems = 0
 
-    def finalize_oldest():
-        bi, works, finals, desc, t_disp = in_flight.pop(0)
-        sims, chunks = _finalize_bucket(works, finals, desc)
+    def emit_error(bi: int, w: _Work, error: Dict[str, Any]):
+        # Structured quarantine record: empty metrics, the failure in
+        # meta, never checkpointed (a resume re-attempts the cell).
+        results.append(emit(session.finish_result(
+            w.spec, w.cell, {}, w.ev_meta, w.pre, w.resolve_s,
+            extra_meta={"sweep_bucket": bi, "error": error},
+            post=w.post), persist=False))
+
+    def finalize(bi, works, finals, desc, t_disp, retried: bool):
+        # One-shot graceful degradation: a failed compile/execute is
+        # retried with every cell forced onto the ref kernel backend
+        # (a fresh bucket program — the SimConfig is jit-static); a
+        # second failure quarantines the bucket's cells.
+        try:
+            sims, chunks = _finalize_bucket(works, finals, desc)
+        except Exception as e:                      # noqa: BLE001
+            if retried:
+                say(f"# bucket {bi}: ref-backend retry failed too "
+                    f"({type(e).__name__}); quarantining "
+                    f"{len(works)} cell(s)")
+                for w in works:
+                    emit_error(bi, w, {
+                        "type": "bucket_failure", "retried_ref": True,
+                        "exception": type(e).__name__,
+                        "message": str(e)[:500]})
+                return
+            say(f"# bucket {bi}: batched execution failed "
+                f"({type(e).__name__}); retrying once on the "
+                "ref kernel backend")
+            for w in works:
+                w.cfg = dataclasses.replace(w.cfg, kernel_backend="ref")
+            t2 = time.perf_counter()
+            try:
+                finals2, desc2, _mode, _pads = _dispatch_bucket(
+                    works, rt, bi)
+            except Exception as e2:                 # noqa: BLE001
+                say(f"# bucket {bi}: ref-backend retry failed too "
+                    f"({type(e2).__name__}); quarantining "
+                    f"{len(works)} cell(s)")
+                for w in works:
+                    emit_error(bi, w, {
+                        "type": "bucket_failure", "retried_ref": True,
+                        "exception": type(e2).__name__,
+                        "message": str(e2)[:500]})
+                return
+            finalize(bi, works, finals2, desc2, t2, retried=True)
+            return
         bucket_wall = time.perf_counter() - t_disp
         for wi, w in enumerate(works):
+            bad = [r for r in sims[wi]
+                   if not (np.all(np.isfinite(r.delivered))
+                           and np.isfinite(r.link_util_mean))]
+            if bad:
+                say(f"# bucket {bi}: non-finite simulation state for "
+                    f"{w.spec.cell_id}; quarantining")
+                emit_error(bi, w, {"type": "nonfinite",
+                                   "seeds_bad": len(bad)})
+                continue
             metrics = fct_metrics(sims[wi])
             wall = w.resolve_s + bucket_wall * (len(w.sim_seeds)
                                                 / max(1, len(desc[0])))
@@ -409,9 +474,34 @@ def dist_sweep(session: Session, cells: List[ExperimentSpec], *,
                             # sequential engine legitimately omits it).
                             "sweep_chunks": chunks[wi]}, post=w.post)))
 
+    def finalize_oldest():
+        bi, works, finals, desc, t_disp = in_flight.pop(0)
+        finalize(bi, works, finals, desc, t_disp, retried=False)
+
     for bi, works in enumerate(buckets.values()):
         t_disp = time.perf_counter()
-        finals, desc, mode, (nf, ne, nh) = _dispatch_bucket(works, rt, bi)
+        try:
+            finals, desc, mode, (nf, ne, nh) = _dispatch_bucket(works, rt,
+                                                                bi)
+        except Exception as e:                      # noqa: BLE001
+            say(f"# bucket {bi}: dispatch failed ({type(e).__name__}); "
+                "retrying once on the ref kernel backend")
+            for w in works:
+                w.cfg = dataclasses.replace(w.cfg, kernel_backend="ref")
+            try:
+                finals, desc, mode, (nf, ne, nh) = _dispatch_bucket(
+                    works, rt, bi)
+            except Exception as e2:                 # noqa: BLE001
+                say(f"# bucket {bi}: ref-backend retry failed too "
+                    f"({type(e2).__name__}); quarantining "
+                    f"{len(works)} cell(s)")
+                for w in works:
+                    emit_error(bi, w, {
+                        "type": "bucket_failure", "retried_ref": True,
+                        "exception": type(e2).__name__,
+                        "message": str(e2)[:500]})
+                n_buckets += 1
+                continue
         say(f"# bucket {bi}: {len(works)} cells x seeds = {len(desc[0])} "
             f"programs via {mode}, padded to F={nf} E={ne} H={nh}")
         in_flight.append((bi, works, finals, desc, t_disp))

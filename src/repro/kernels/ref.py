@@ -61,7 +61,8 @@ def semiring_matmul_ref(a: jnp.ndarray, b: jnp.ndarray,
 
 def waterfill_ref(edges: jnp.ndarray, w: jnp.ndarray, desired: jnp.ndarray,
                   cap: jnp.ndarray, fair_iters: int = 2,
-                  active: Optional[jnp.ndarray] = None):
+                  active: Optional[jnp.ndarray] = None,
+                  want_util: bool = False):
     """Oracle for :func:`repro.kernels.waterfill.waterfill_step`.
 
     One max-min water-filling transport step over virtual links:
@@ -81,10 +82,22 @@ def waterfill_ref(edges: jnp.ndarray, w: jnp.ndarray, desired: jnp.ndarray,
       uncongested network, which the tcp/dctcp rate dynamics rely on.
       ``active=None`` means all rows are active and edge ids are taken
       as-is (the pre-dynamic-lane contract).
+    * ``want_util`` — the ECN lane (PR 8): additionally return each
+      flow's worst link *demand utilization* — max over its live edges
+      of ``load / cap``, where ``load`` is the first refinement round's
+      scatter of provisional demands (``min(desired, fair share)``; the
+      round-0 claim counts when ``fair_iters == 0``) — the link-load
+      congestion signal the dctcp recovery path marks on.  A link whose
+      demand approaches capacity reports util -> 1 (DCTCP's marking
+      regime); rows with no live edge report 0.0 (an idle flow sees an
+      unloaded network).  Trace-time flag: ``want_util=False`` builds
+      the exact two-output program that predates the lane.
 
-    Returns ``(sent, share)``: the achieved rate after ``fair_iters``
-    feasibility refinements (never oversubscribing any link), and the
-    raw fair-share signal (the congestion feedback transports consume).
+    Returns ``(sent, share)`` — or ``(sent, share, util)`` with
+    ``want_util`` — where ``sent`` is the achieved rate after
+    ``fair_iters`` feasibility refinements (never oversubscribing any
+    link) and ``share`` the raw fair-share signal (the congestion
+    feedback transports consume).
     """
     e_tot = cap.shape[0]
     w = w.astype(jnp.float32)
@@ -98,14 +111,23 @@ def waterfill_ref(edges: jnp.ndarray, w: jnp.ndarray, desired: jnp.ndarray,
         jnp.broadcast_to(w[:, None], edges.shape))
     fair = cap / jnp.maximum(count, 1e-9)
     share = jnp.min(jnp.where(live, fair[edges], jnp.inf), axis=1)
+    util = None
+    if want_util and fair_iters == 0:
+        link_util = count / jnp.maximum(cap, 1e-9)
+        util = jnp.max(jnp.where(live, link_util[edges], 0.0), axis=1)
     d = jnp.minimum(desired, share)
-    for _ in range(fair_iters):
+    for it in range(fair_iters):
         load = jnp.zeros(e_tot, jnp.float32).at[edges].add(
             jnp.broadcast_to(d[:, None], edges.shape))
+        if want_util and it == 0:
+            link_util = load / jnp.maximum(cap, 1e-9)
+            util = jnp.max(jnp.where(live, link_util[edges], 0.0), axis=1)
         scale = jnp.minimum(1.0, cap / jnp.maximum(load, 1e-9))
         s = jnp.min(jnp.where(live, scale[edges], jnp.inf), axis=1)
         s = jnp.where(jnp.isfinite(s), s, 0.0)
         d = d * s
+    if want_util:
+        return d, share, util
     return d, share
 
 

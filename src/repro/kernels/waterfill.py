@@ -53,8 +53,18 @@ __all__ = ["waterfill_step"]
 
 
 def _waterfill_kernel(edges_ref, w_ref, desired_ref, active_ref, cap_ref,
-                      sent_ref, share_ref, load_ref, d_ref, adv_ref, *,
-                      e_tot: int, be: int, n_e_tiles: int, bf: int):
+                      *refs, e_tot: int, be: int, n_e_tiles: int, bf: int,
+                      want_util: bool, util_round: int):
+    # The ECN lane (PR 8) adds one output (per-flow worst link demand
+    # utilization, read off the ``util_round`` scatter — the first
+    # demand refinement round, whose loads are the provisional demands)
+    # and one VMEM scratch; ``want_util`` is a TRACE-TIME flag, so the
+    # False program is structurally identical to the pre-lane kernel.
+    if want_util:
+        (sent_ref, share_ref, util_ref, load_ref, d_ref, adv_ref,
+         u_ref) = refs
+    else:
+        sent_ref, share_ref, load_ref, d_ref, adv_ref = refs
     r = pl.program_id(0)          # water-filling round (0 = fair share)
     p = pl.program_id(1)          # 0 = scatter loads, 1 = reduce per flow
     t = pl.program_id(2)          # flow tile
@@ -109,11 +119,25 @@ def _waterfill_kernel(edges_ref, w_ref, desired_ref, active_ref, cap_ref,
                                  jnp.minimum(1.0, per_link))  # scale (r > 0)
             # Each edge id hits exactly one link tile, so summing the
             # masked broadcasts across tiles IS the gather.
+            if want_util:
+                acc, acc_u = acc
+                # Accumulated every round, but only the ``util_round``
+                # value is consumed (u_ref is written under that round).
+                per_util = load_t / jnp.maximum(cap_t, 1e-9)
+                acc_u = acc_u + jnp.sum(
+                    jnp.where(onehot, per_util[0][None, None, :], 0.0),
+                    axis=2)
+                return (acc + jnp.sum(
+                    jnp.where(onehot, per_link[0][None, None, :], 0.0),
+                    axis=2), acc_u)
             return acc + jnp.sum(
                 jnp.where(onehot, per_link[0][None, None, :], 0.0), axis=2)
 
+        acc0 = jnp.zeros((bf, s), jnp.float32)
         g = jax.lax.fori_loop(0, n_e_tiles, etile,
-                              jnp.zeros((bf, s), jnp.float32))    # (bf, S)
+                              (acc0, acc0) if want_util else acc0)  # (bf, S)
+        if want_util:
+            g, g_util = g
         live = edges < e_tot - 1                  # trash never enters a min
         m = jnp.min(jnp.where(live, g, jnp.inf), axis=1, keepdims=True)
 
@@ -126,14 +150,23 @@ def _waterfill_kernel(edges_ref, w_ref, desired_ref, active_ref, cap_ref,
         def _refine():
             d_ref[rows] = d_ref[rows] * jnp.where(jnp.isfinite(m), m, 0.0)
 
+        if want_util:
+            @pl.when(r == util_round)
+            def _util():
+                u_ref[rows] = jnp.max(jnp.where(live, g_util, 0.0),
+                                      axis=1, keepdims=True)
+
         sent_ref[...] = d_ref[rows]
         share_ref[...] = adv_ref[rows]
+        if want_util:
+            util_ref[...] = u_ref[rows]
 
 
 @functools.partial(jax.jit, static_argnames=("e_tot", "fair_iters", "bf",
-                                             "be", "interpret"))
+                                             "be", "interpret", "want_util"))
 def _pallas_waterfill(edges, w, desired, active, cap, *, e_tot: int,
-                      fair_iters: int, bf: int, be: int, interpret: bool):
+                      fair_iters: int, bf: int, be: int, interpret: bool,
+                      want_util: bool = False):
     f, s = edges.shape
     fp = -(-max(f, 1) // bf) * bf
     ep = -(-e_tot // be) * be
@@ -153,9 +186,11 @@ def _pallas_waterfill(edges, w, desired, active, cap, *, e_tot: int,
         cap.astype(jnp.float32))
 
     flow_tile = lambda r, p, t: (t, 0)      # noqa: E731
-    sent, share = pl.pallas_call(
+    n_out = 3 if want_util else 2
+    out = pl.pallas_call(
         functools.partial(_waterfill_kernel, e_tot=e_tot, be=be,
-                          n_e_tiles=ep // be, bf=bf),
+                          n_e_tiles=ep // be, bf=bf, want_util=want_util,
+                          util_round=min(1, fair_iters)),
         grid=(1 + fair_iters, 2, fp // bf),
         in_specs=[
             pl.BlockSpec((bf, s), flow_tile),
@@ -164,25 +199,23 @@ def _pallas_waterfill(edges, w, desired, active, cap, *, e_tot: int,
             pl.BlockSpec((bf, 1), flow_tile),
             pl.BlockSpec((1, ep), lambda r, p, t: (0, 0)),
         ],
-        out_specs=[
-            pl.BlockSpec((bf, 1), flow_tile),
-            pl.BlockSpec((bf, 1), flow_tile),
-        ],
-        out_shape=[jax.ShapeDtypeStruct((fp, 1), jnp.float32),
-                   jax.ShapeDtypeStruct((fp, 1), jnp.float32)],
+        out_specs=[pl.BlockSpec((bf, 1), flow_tile)] * n_out,
+        out_shape=[jax.ShapeDtypeStruct((fp, 1), jnp.float32)] * n_out,
         scratch_shapes=[pltpu.VMEM((1, ep), jnp.float32),
                         pltpu.VMEM((fp, 1), jnp.float32),
-                        pltpu.VMEM((fp, 1), jnp.float32)],
+                        pltpu.VMEM((fp, 1), jnp.float32)]
+        + ([pltpu.VMEM((fp, 1), jnp.float32)] if want_util else []),
         interpret=interpret,
     )(edges_p, w_p, d_p, act_p, cap_p)
-    return sent[:f, 0], share[:f, 0]
+    return tuple(o[:f, 0] for o in out)
 
 
 def waterfill_step(edges: jnp.ndarray, w: jnp.ndarray, desired: jnp.ndarray,
                    cap: jnp.ndarray, *, active: Optional[jnp.ndarray] = None,
                    fair_iters: int = 2, backend: Optional[str] = None,
                    interpret: Optional[bool] = None, bf: int = 128,
-                   be: int = 512) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                   be: int = 512,
+                   want_util: bool = False) -> Tuple[jnp.ndarray, ...]:
     """One fused water-filling step: ``(sent, share)`` per flow.
 
     ``edges`` is the (F, S) virtual-link layout (S = hop slots + NIC
@@ -193,9 +226,13 @@ def waterfill_step(edges: jnp.ndarray, w: jnp.ndarray, desired: jnp.ndarray,
     trash slot INSIDE the step (their share comes back +inf), so callers
     with arrival/departure lanes pass raw path edges (which may contain
     -1 padding) plus the mask instead of materialising a masked edge
-    tensor per step.  ``backend=None`` picks
-    :func:`repro.kernels.kernel_backend`; semantics are defined by
-    :func:`repro.kernels.ref.waterfill_ref`.
+    tensor per step.  ``want_util=True`` (the ECN lane) returns
+    ``(sent, share, util)`` where ``util`` is each flow's worst link
+    demand utilization (first-refinement load over capacity) — the
+    trace-time flag compiles an extra output in both backends, and
+    False compiles the exact pre-lane program.
+    ``backend=None`` picks :func:`repro.kernels.kernel_backend`;
+    semantics are defined by :func:`repro.kernels.ref.waterfill_ref`.
     """
     backend = backend or kernel_backend()
     if backend not in ("pallas", "ref"):
@@ -203,10 +240,12 @@ def waterfill_step(edges: jnp.ndarray, w: jnp.ndarray, desired: jnp.ndarray,
                          "choose 'pallas' or 'ref'")
     if backend == "ref":
         return ref.waterfill_ref(edges, w, desired, cap,
-                                 fair_iters=fair_iters, active=active)
+                                 fair_iters=fair_iters, active=active,
+                                 want_util=want_util)
     act = (jnp.ones(edges.shape[0], jnp.float32) if active is None
            else active.astype(jnp.float32))
     return _pallas_waterfill(edges, w, desired, act, cap,
                              e_tot=int(cap.shape[0]),
                              fair_iters=int(fair_iters), bf=bf, be=be,
-                             interpret=interpret_default(interpret))
+                             interpret=interpret_default(interpret),
+                             want_util=want_util)
