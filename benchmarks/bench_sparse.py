@@ -1,0 +1,69 @@
+"""Block-sparse path engine (PR 9): frontier APSP, blocked table builds,
+and compressed-table lookups.
+
+The timed numbers are the blocked engine's jitted device programs — the
+representation the scale-smoke CI job builds sf(q=29) through — with the
+dense engine's output as the bit-identity check in the derived column.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import layers as layers_mod
+from repro.core import paths as paths_mod
+from repro.core.topology import slim_fly
+
+from .common import emit, timeit
+
+
+def main(quick: bool = False) -> None:
+    q = 11 if quick else 17
+    topo = slim_fly(q)
+    n = topo.n_routers
+    lr = layers_mod.build_layers(topo, 5, 0.6, scheme="rand", seed=0,
+                                 engine="dense", representation="dense")
+    stack = jnp.asarray(np.asarray(lr.layer_adj, bool))
+    max_l = 16
+
+    # ---- frontier (wavefront) APSP over the layer stack -----------------
+    f_apsp = lambda: jax.block_until_ready(
+        paths_mod.apsp_batched(stack, max_l=max_l, engine="blocked"))
+    us = timeit(f_apsp, n=3)
+    d_b = np.asarray(f_apsp())
+    d_d = np.asarray(paths_mod.apsp_batched(stack, max_l=max_l,
+                                            engine="dense"))
+    ok = np.array_equal(d_b, d_d)
+    emit(f"kernels/sparse/apsp/sf{q}", us,
+         f"layers={stack.shape[0]} n={n} exact={ok}")
+
+    # ---- full blocked table build (APSP + chunked forwarding) -----------
+    key = jax.random.PRNGKey(0)
+    f_tab = lambda: jax.block_until_ready(paths_mod.layer_tables_batched(
+        stack, key, max_l, engine="blocked")[0])
+    us = timeit(f_tab, n=3)
+    nh_b = np.asarray(f_tab())
+    nh_d = np.asarray(paths_mod.layer_tables_batched(
+        stack, key, max_l, engine="dense")[0])
+    ok = np.array_equal(nh_b, nh_d)
+    emit(f"kernels/sparse/tables/sf{q}", us, f"n={n} exact={ok}")
+
+    # ---- compressed forwarding-table lookups ----------------------------
+    ct = paths_mod.CompressedTables.from_dense(lr.nh)
+    rng = np.random.default_rng(0)
+    m = 50_000 if quick else 200_000
+    li = rng.integers(lr.n_layers, size=m)
+    s = rng.integers(n, size=m)
+    t = rng.integers(n, size=m)
+    us = timeit(lambda: ct.lookup(li, s, t), n=3)
+    ok = np.array_equal(ct.lookup(li, s, t), lr.nh[li, s, t])
+    ratio = ct.nbytes / lr.nh.nbytes
+    emit(f"paths/compressed_lookup/sf{q}", us,
+         f"m={m} mlookups_s={m / us.median_us:.1f} "
+         f"bytes_ratio={ratio:.3f} exact={ok}")
+
+
+if __name__ == "__main__":
+    main()

@@ -52,7 +52,12 @@ Guarded:
   * ``failures/…``              — bench_failures fault-injection costs:
                                   scenario mask + stack repair, and the
                                   per-step price of the mid-run
-                                  link-down capacity lane.
+                                  link-down capacity lane;
+  * ``kernels/sparse/…``        — bench_sparse blocked-engine programs:
+                                  frontier APSP and the full blocked
+                                  table build (the scale-smoke path);
+  * ``paths/compressed_lookup/…`` — compressed forwarding-table lookup
+                                  throughput (the host-side walk path).
 """
 
 from __future__ import annotations
@@ -66,7 +71,8 @@ import sys
 GUARDED = [r"^fig12/disjoint/", r"^transport/steptime/",
            r"^transport/fusedstep/", r"^transport/earlyexit/",
            r"^transport/openloop/", r"^transport/recovery/",
-           r"^sweep/dist/", r"^failures/"]
+           r"^sweep/dist/", r"^failures/", r"^kernels/sparse/",
+           r"^paths/compressed_lookup/"]
 CALIBRATE = r"^kernels/pathcount/"
 
 

@@ -20,7 +20,7 @@ import traceback
 
 MODULES = ["bench_diversity", "bench_collisions", "bench_layers",
            "bench_transport", "bench_throughput", "bench_kernels",
-           "bench_fabric", "bench_sweep", "bench_failures"]
+           "bench_sparse", "bench_fabric", "bench_sweep", "bench_failures"]
 
 # k=v pairs whose value is a number (optionally with a trailing unit,
 # e.g. "tput=2.74GB/s"), a bool, or nan/inf.  Keys are anchored at a

@@ -234,10 +234,14 @@ def apply_failures(lr: LayeredRouting, dead: np.ndarray,
         if max_len is None:
             # Re-converged paths detour around failures: build slack + 2.
             max_len = max(6, lr.topo.diameter_nominal + 6)
-        nbr = jnp.asarray(paths_mod.neighbor_table(masked_la.any(axis=0)))
+        union = masked_la.any(axis=0)
+        nbr = jnp.asarray(paths_mod.neighbor_table(union))
         key = jax.random.fold_in(jax.random.PRNGKey(int(seed)), 0xF1)
+        eng = paths_mod.path_engine(n)
+        nbr_in = (jnp.asarray(paths_mod.neighbor_table(union.T))
+                  if eng == "blocked" else None)
         nh_j, reach_j, dist_j = paths_mod._layer_tables_program(
-            jnp.asarray(masked_la), nbr, key, max_len)
+            jnp.asarray(masked_la), nbr, key, max_len, eng, nbr_in)
         reach = np.asarray(reach_j)
         nh = np.asarray(nh_j)
         pathlen = np.where(reach, np.asarray(dist_j),
@@ -257,9 +261,16 @@ def apply_failures(lr: LayeredRouting, dead: np.ndarray,
         pathlen = np.where(reach, lr.pathlen, _UNREACH).astype(np.int16)
 
     report = _count_report(lr, lr.reach, reach, dead, rate, pattern, mode)
+    # The tables changed, so any compressed form on the pristine stack is
+    # stale; re-attach one iff the input carried one.
+    compressed = None
+    if lr.compressed is not None:
+        # Auto block, not the input's: repair redistributes next hops,
+        # so the old block size may no longer fit the uint8 selector.
+        compressed = paths_mod.CompressedTables.from_dense(nh)
     degraded = dataclasses.replace(
         lr, nh=nh, reach=reach, pathlen=pathlen, layer_adj=masked_la,
-        build_stats=None, link_down_step=None)
+        build_stats=None, link_down_step=None, compressed=compressed)
     return degraded, report
 
 

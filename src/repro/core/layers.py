@@ -104,6 +104,11 @@ class LayeredRouting:
     # INT32_MAX = never dies); None = pristine fabric.  Set by the
     # fault-injection engine (repro.core.failures.link_down_schedule).
     link_down_step: Optional[np.ndarray] = None
+    # Compressed per-router (dst-block, next-hop set) tables — attached
+    # when the stack was built with representation="compressed" (the
+    # blocked engine's default).  Exactly reconstructs ``nh``; the
+    # transport walk and the batched disjoint-path walk prefer it.
+    compressed: Optional[paths_mod.CompressedTables] = None
 
     @property
     def n_layers(self) -> int:
@@ -185,8 +190,9 @@ def _rand_layer(adj: np.ndarray, rho: float, rng: np.random.Generator,
 # Single-program builders for the schemes whose sampling depends on
 # previously built tables (pi_min) or on weighted semiring distances (ksp).
 # -----------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("n_layers", "max_l"))
-def _pi_min_program(adj, nbr, iu, ju, key, n_layers, rho, max_l):
+@functools.partial(jax.jit, static_argnames=("n_layers", "max_l", "engine"))
+def _pi_min_program(adj, nbr, iu, ju, key, n_layers, rho, max_l,
+                    engine="dense"):
     """The whole §5.3.2 build as one device program: a scan over layers
     that samples each DAG biased against accumulated edge usage, builds
     its tables, and folds the counting-semiring usage fixpoint back into
@@ -195,7 +201,7 @@ def _pi_min_program(adj, nbr, iu, ju, key, n_layers, rho, max_l):
     e = iu.shape[0]
     k0, krest = jax.random.split(key)
     nh0, reach0, dist0 = paths_mod._layer_tables_core(adj[None], nbr, k0,
-                                                      max_l)
+                                                      max_l, engine)
     usage0 = paths_mod._edge_usage_core(nh0[0], reach0[0], max_l)
 
     def step(usage, k):
@@ -214,7 +220,7 @@ def _pi_min_program(adj, nbr, iu, ju, key, n_layers, rho, max_l):
         vv = jnp.where(fwd, ju, iu)
         la = jnp.zeros((n, n), dtype=bool).at[uu, vv].set(keep)
         nh, reach, dist = paths_mod._layer_tables_core(la[None], nbr, k_fw,
-                                                       max_l)
+                                                       max_l, engine)
         usage = usage + paths_mod._edge_usage_core(nh[0], reach[0], max_l)
         return usage, (la, nh[0], reach[0], dist[0])
 
@@ -230,8 +236,8 @@ def _pi_min_program(adj, nbr, iu, ju, key, n_layers, rho, max_l):
     return la_all, nh_all, reach_all, dist_all
 
 
-@functools.partial(jax.jit, static_argnames=("n_layers", "max_l"))
-def _ksp_program(adj, nbr, key, n_layers, max_l):
+@functools.partial(jax.jit, static_argnames=("n_layers", "max_l", "engine"))
+def _ksp_program(adj, nbr, key, n_layers, max_l, engine="dense"):
     """k-shortest-paths-style layers in one program: per-layer perturbed
     edge weights, (min, +) semiring all-pairs distances, and next hops
     minimising ``w[s, u] + D[u, t]`` over neighbors u."""
@@ -239,7 +245,7 @@ def _ksp_program(adj, nbr, key, n_layers, max_l):
     idx = jnp.arange(n)
     k0, kw = jax.random.split(key)
     nh0, reach0, dist0 = paths_mod._layer_tables_core(adj[None], nbr, k0,
-                                                      max_l)
+                                                      max_l, engine)
     hop = dist0[0]
     kk = n_layers - 1
     u01 = jax.random.uniform(kw, (kk, n, n))
@@ -261,7 +267,30 @@ def _ksp_program(adj, nbr, key, n_layers, max_l):
         nh = jnp.where(jnp.isfinite(cost.min(axis=1)), best, -1)
         return nh.at[idx, idx].set(idx)
 
-    nh_extra = jax.lax.map(one_layer, (w, d))
+    def one_layer_blocked(args):
+        # Destination-chunked twin of one_layer: the (N, D, N) cost cube
+        # becomes (N, D, _CHUNK) slabs; per-column argmin is identical.
+        w_l, d_l = args
+        ch = paths_mod._CHUNK
+        nc = -(-n // ch)
+        npad = nc * ch
+        w_nbr = jnp.take_along_axis(w_l, nbr, axis=1)         # (N, D)
+        d_p = jnp.full((n, npad), jnp.inf).at[:, :n].set(d_l)
+        d_cs = jnp.moveaxis(d_p.reshape(n, nc, ch), 1, 0)     # (nc, N, C)
+
+        def one_chunk(d_c):
+            cost = jnp.where(has_edge[:, :, None],
+                             w_nbr[:, :, None] + d_c[nbr], jnp.inf)
+            j = jnp.argmin(cost, axis=1)                      # (N, C)
+            best = nbr[rows, j].astype(jnp.int32)
+            return jnp.where(jnp.isfinite(cost.min(axis=1)), best, -1)
+
+        out = jax.lax.map(one_chunk, d_cs)                    # (nc, N, C)
+        nh = jnp.moveaxis(out, 0, 1).reshape(n, npad)[:, :n]
+        return nh.at[idx, idx].set(idx)
+
+    layer_fn = one_layer_blocked if engine == "blocked" else one_layer
+    nh_extra = jax.lax.map(layer_fn, (w, d))
     nh_all = jnp.concatenate([nh0, nh_extra])
     reach_all = jnp.broadcast_to((hop <= max_l)[None], (n_layers, n, n))
     dist_all = jnp.broadcast_to(hop[None], (n_layers, n, n))
@@ -271,16 +300,32 @@ def _ksp_program(adj, nbr, key, n_layers, max_l):
 
 def build_layers(topo: Topology, n_layers: int, rho: float,
                  scheme: str = "rand", seed: int = 0,
-                 max_len: Optional[int] = None) -> LayeredRouting:
+                 max_len: Optional[int] = None,
+                 engine: Optional[str] = None,
+                 representation: Optional[str] = None) -> LayeredRouting:
     """Construct the FatPaths layer stack (layer 0 = all links, minimal).
 
     All L layers' tables come from ONE batched device program; there is
     no per-layer host loop for table construction.  ``build_stats`` on
     the result records the host (adjacency sampling) vs device (semiring
     table construction) wall-time split.
+
+    ``engine`` overrides the ``REPRO_PATH_ENGINE`` resolution (``dense``
+    below 512 routers, ``blocked`` — frontier APSP + chunked forwarding
+    — above; both bit-identical).  ``representation`` picks the table
+    form: ``"compressed"`` attaches :class:`~repro.core.paths
+    .CompressedTables` to the result (the default whenever the engine
+    resolves blocked), ``"dense"`` keeps plain arrays only.
     """
     adj = np.asarray(topo.adj, dtype=bool)
     n = adj.shape[0]
+    eng = paths_mod.path_engine(n, engine)
+    if representation in (None, "", "auto"):
+        rep = "compressed" if eng == "blocked" else "dense"
+    elif representation in ("dense", "compressed"):
+        rep = representation
+    else:
+        raise ValueError(f"unknown representation {representation!r}")
     if max_len is None:
         # Allow "almost minimal" detours: nominal diameter + slack.
         max_len = max(6, topo.diameter_nominal + 4)
@@ -295,11 +340,11 @@ def build_layers(topo: Topology, n_layers: int, rho: float,
         t_dev = time.perf_counter()
         la, nh, reach, dist = _pi_min_program(
             adj_j, nbr, jnp.asarray(iu), jnp.asarray(ju), key, n_layers,
-            float(rho), max_len)
+            float(rho), max_len, eng)
     elif scheme == "ksp":
         t_dev = time.perf_counter()
         la, nh, reach, dist = _ksp_program(adj_j, nbr, key, n_layers,
-                                           max_len)
+                                           max_len, eng)
     else:
         layer_adjs: List[np.ndarray] = [adj.copy()]
         if scheme in ("rand", "undir"):
@@ -318,18 +363,24 @@ def build_layers(topo: Topology, n_layers: int, rho: float,
         la = jnp.asarray(np.stack(layer_adjs))
         t_dev = time.perf_counter()
         nh, reach, dist = paths_mod._layer_tables_program(la, nbr, key,
-                                                          max_len)
+                                                          max_len, eng)
     jax.block_until_ready(nh)
     t1 = time.perf_counter()
 
     reach_np = np.asarray(reach)
     pathlen = np.where(reach_np, np.asarray(dist), _UNREACH).astype(np.int16)
+    nh_np = np.asarray(nh)
+    compressed = None
+    if rep == "compressed":
+        compressed = paths_mod.CompressedTables.from_dense(nh_np)
+    t2 = time.perf_counter()
     return LayeredRouting(
         topo=topo, scheme=scheme, rho=rho,
-        nh=np.asarray(nh), reach=reach_np,
+        nh=nh_np, reach=reach_np,
         pathlen=pathlen, layer_adj=np.asarray(la),
-        build_stats={"total_s": t1 - t0, "device_s": t1 - t_dev,
-                     "host_s": t_dev - t0},
+        build_stats={"total_s": t2 - t0, "device_s": t1 - t_dev,
+                     "host_s": t_dev - t0, "compress_s": t2 - t1},
+        compressed=compressed,
     )
 
 
@@ -395,7 +446,10 @@ def layer_disjoint_paths_batch(lr: LayeredRouting, s: np.ndarray,
                                ) -> np.ndarray:
     """:func:`layer_disjoint_paths` for many (s, t) pairs: ALL
     (pair, layer) table walks happen in one batched call; only the cheap
-    greedy edge-disjointness filter stays per pair."""
+    greedy edge-disjointness filter stays per pair.  When the routing
+    carries compressed tables the walk gathers off them directly — the
+    per-hop working set is O(pairs * L), never a dense (L, N, N) slice,
+    which is what keeps this usable at paper scale."""
     s = np.asarray(s, dtype=np.int32)
     t = np.asarray(t, dtype=np.int32)
     n_pairs = len(s)
@@ -403,7 +457,8 @@ def layer_disjoint_paths_batch(lr: LayeredRouting, s: np.ndarray,
     li = np.tile(np.arange(L, dtype=np.int32), n_pairs)
     ss = np.repeat(s, L)
     tt = np.repeat(t, L)
-    walks = paths_mod.walk_paths_layers(lr.nh, li, ss, tt, max_hops)
+    tables = lr.compressed if lr.compressed is not None else lr.nh
+    walks = paths_mod.walk_paths_layers(tables, li, ss, tt, max_hops)
     walks = walks.reshape(n_pairs, L, max_hops + 1)
     out = np.zeros(n_pairs, dtype=np.int64)
     for p in range(n_pairs):

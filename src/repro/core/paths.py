@@ -19,12 +19,34 @@ host-side ``rng.random`` scoring).
 Counts are held in f32 and *saturate*: they are exact below 2**24, which
 is far beyond every threshold the paper's diversity metrics use (the
 paper cares about counts in the range 1..k' ~ tens).
+
+Two *engines* implement the batched builders (PR 9):
+
+* ``dense``   — the original (L, N, N) semiring products; simplest, and
+                the fastest below ~500 routers where every intermediate
+                fits in cache.
+* ``blocked`` — the scale engine: frontier/wavefront APSP that relaxes
+                through the (N, Dmax) neighbor table instead of a full
+                matmul (O(N^2 * Dmax) per sweep, and low-diameter
+                topologies converge in <= diameter sweeps — <= 4 on
+                paper-scale Slim Fly), plus destination-chunked
+                forwarding construction so no (N, Dmax, N) intermediate
+                ever materialises.  Bit-identical to ``dense`` — both
+                compute exact BFS levels and consume the same per-entry
+                uniforms — which CI asserts on every scheme.
+
+``REPRO_PATH_ENGINE=dense|blocked|auto`` selects (default ``auto``:
+``blocked`` from 512 routers up).  :class:`CompressedTables` is the
+matching forwarding-table representation: per-router ``(dst-block,
+next-hop set)`` instead of a dense int32 row — ~4x smaller, exact.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional, Tuple
+import os
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -48,7 +70,49 @@ __all__ = [
     "table_validity_batched",
     "walk_paths",
     "walk_paths_layers",
+    "path_engine",
+    "representation_for",
+    "CompressedTables",
 ]
+
+PATH_ENGINES = ("dense", "blocked", "auto")
+
+# auto threshold: below this router count the dense engine's single
+# matmul program wins; above it the frontier gathers do (and the dense
+# (N, Dmax, N) forwarding intermediate starts to dominate memory).
+_BLOCKED_MIN_N = 512
+
+# Destination-axis chunk for the blocked engine's gathers: bounds every
+# intermediate at O(N * Dmax * _CHUNK) regardless of N.
+_CHUNK = 256
+
+
+def path_engine(n: Optional[int] = None, override: Optional[str] = None) -> str:
+    """Resolve the path-engine choice: explicit ``override`` wins, then
+    ``REPRO_PATH_ENGINE=dense|blocked|auto``, else ``auto`` — which picks
+    ``blocked`` from ``_BLOCKED_MIN_N`` routers up (``n=None`` means the
+    caller has no size in hand and auto resolves to ``dense``)."""
+    eng = override or os.environ.get("REPRO_PATH_ENGINE", "") or "auto"
+    if eng not in PATH_ENGINES:
+        raise ValueError(f"unknown path engine {eng!r}; "
+                         f"choose from {PATH_ENGINES}")
+    if eng == "auto":
+        return "blocked" if (n is not None and n >= _BLOCKED_MIN_N) else "dense"
+    return eng
+
+
+def representation_for(n: Optional[int] = None,
+                       override: Optional[str] = None) -> str:
+    """Resolve the forwarding-table representation (``dense`` |
+    ``compressed``): explicit override wins, else it follows the engine —
+    the blocked engine carries compressed tables, the dense one plain
+    (L, N, N) arrays."""
+    if override in ("dense", "compressed"):
+        return override
+    if override not in (None, "", "auto"):
+        raise ValueError(f"unknown table representation {override!r}; "
+                         "choose 'dense', 'compressed' or 'auto'")
+    return "compressed" if path_engine(n) == "blocked" else "dense"
 
 
 # -----------------------------------------------------------------------------
@@ -92,6 +156,64 @@ def neighbor_table(adj_union: np.ndarray) -> np.ndarray:
     return np.argsort(~a, axis=1, kind="stable")[:, :dmax].astype(np.int32)
 
 
+def _apsp_blocked_core(adj: jnp.ndarray, nbr_in: jnp.ndarray,
+                       max_l: int) -> jnp.ndarray:
+    """Frontier/wavefront APSP: the blocked engine's replacement for the
+    boolean-semiring products of :func:`_apsp_core`.
+
+    The dense relaxation ``nreach[s, t] = OR_u reach[s, u] & adj[u, t]``
+    only has candidates u that are *in-neighbors* of t, so it is gathered
+    through the (N, Dmax) in-neighbor table instead of multiplied:
+    O(N^2 * Dmax) per sweep, chunked over the destination axis so no
+    intermediate exceeds O(N * Dmax * _CHUNK).  Both engines compute
+    exact BFS levels sweep-by-sweep, so the int32 distances are
+    bit-identical; convergence takes exactly ``diameter`` sweeps (<= 4 on
+    paper-scale Slim Fly)."""
+    _, n, _ = adj.shape
+    d = nbr_in.shape[1]
+    nc = -(-n // _CHUNK)
+    npad = nc * _CHUNK
+    # pad the destination axis; pad rows gather dummy candidates that the
+    # all-False edge_ok mask discards.
+    nbr_p = jnp.zeros((npad, d), jnp.int32).at[:n].set(nbr_in)
+    nbr_p = nbr_p.reshape(nc, _CHUNK, d)
+    eye = jnp.eye(n, dtype=bool)
+
+    def one_layer(adj_l):
+        # edge_ok[t, j] — the directed edge nbr_in[t, j] -> t exists here.
+        edge_ok = jnp.take_along_axis(adj_l.T, nbr_in, axis=1)   # (N, D)
+        edge_ok = jnp.zeros((npad, d), bool).at[:n].set(edge_ok)
+        edge_ok = edge_ok.reshape(nc, _CHUNK, d)
+        dist0 = jnp.where(eye, 0,
+                          jnp.where(adj_l, 1, max_l + 1)).astype(jnp.int32)
+        reach0 = adj_l | eye
+
+        def relax(reach):
+            def one_chunk(args):
+                nbr_c, ok_c = args                     # (C, D) each
+                cand = reach[:, nbr_c]                 # (N, C, D)
+                return (cand & ok_c[None]).any(axis=2)  # (N, C)
+
+            out = jax.lax.map(one_chunk, (nbr_p, edge_ok))   # (nc, N, C)
+            return jnp.moveaxis(out, 0, 1).reshape(n, npad)[:, :n]
+
+        def body(state):
+            dist, reach, l, _ = state
+            nreach = relax(reach)
+            newly = nreach & ~reach
+            dist = jnp.where(newly & (dist > l + 1), l + 1, dist)
+            return dist, reach | nreach, l + 1, newly.any()
+
+        def cond(state):
+            return jnp.logical_and(state[3], state[2] < max_l)
+
+        dist, _, _, _ = jax.lax.while_loop(
+            cond, body, (dist0, reach0, jnp.int32(1), jnp.bool_(True)))
+        return dist
+
+    return jax.lax.map(one_layer, adj)
+
+
 def _forwarding_core(adj: jnp.ndarray, dist: jnp.ndarray, nbr: jnp.ndarray,
                      key: jnp.ndarray) -> jnp.ndarray:
     """Single-next-hop tables for an (L, N, N) stack, on device.
@@ -120,6 +242,54 @@ def _forwarding_core(adj: jnp.ndarray, dist: jnp.ndarray, nbr: jnp.ndarray,
         j = jnp.argmax(pick, axis=1)                         # (N, N)
         nh = nbr[rows, j].astype(jnp.int32)
         return jnp.where(cnt > 0, nh, -1)
+
+    nh = jax.lax.map(one_layer, (adj, dist, u01))
+    idx = jnp.arange(n)
+    return nh.at[:, idx, idx].set(idx)
+
+
+def _forwarding_blocked_core(adj: jnp.ndarray, dist: jnp.ndarray,
+                             nbr: jnp.ndarray, key: jnp.ndarray) -> jnp.ndarray:
+    """Destination-chunked :func:`_forwarding_core`: the dense version
+    gathers a (N, Dmax, N) candidate-distance cube per layer (~0.5 GB at
+    sf(q=29)); here each chunk holds (N, Dmax, _CHUNK).  The per-entry
+    uniforms come from the SAME (L, N, N) draw, sliced per chunk, and
+    every per-column computation (candidate mask, count, r-th-valid pick)
+    is column-independent — so the tables are bit-identical to the dense
+    engine's."""
+    L, n, _ = adj.shape
+    d = nbr.shape[1]
+    u01 = jax.random.uniform(key, (L, n, n))
+    rows = jnp.arange(n)[:, None]
+    nc = -(-n // _CHUNK)
+    npad = nc * _CHUNK
+
+    def one_layer(args):
+        adj_l, dist_l, u_l = args
+        has_edge = jnp.take_along_axis(adj_l, nbr, axis=1)       # (N, D)
+        # pad the dest axis with a distance no candidate test matches
+        # (x + 1 == x is never true), so pad columns yield cnt=0 / nh=-1
+        # and are sliced away.
+        dist_p = jnp.full((n, npad), jnp.int32(-10)).at[:, :n].set(dist_l)
+        u_p = jnp.zeros((n, npad), u_l.dtype).at[:, :n].set(u_l)
+        dist_cs = jnp.moveaxis(dist_p.reshape(n, nc, _CHUNK), 1, 0)
+        u_cs = jnp.moveaxis(u_p.reshape(n, nc, _CHUNK), 1, 0)
+
+        def one_chunk(args2):
+            dist_c, u_c = args2                                  # (N, C)
+            dist_nbr = dist_c[nbr]                               # (N, D, C)
+            ok = has_edge[:, :, None] & (dist_nbr + 1 == dist_c[:, None, :])
+            cnt = ok.sum(axis=1)                                 # (N, C)
+            r = jnp.clip((u_c * cnt).astype(jnp.int32), 0,
+                         jnp.maximum(cnt - 1, 0))
+            csum = jnp.cumsum(ok.astype(jnp.int32), axis=1)
+            pick = ok & (csum == (r + 1)[:, None, :])
+            j = jnp.argmax(pick, axis=1)                         # (N, C)
+            nh_c = nbr[rows, j].astype(jnp.int32)
+            return jnp.where(cnt > 0, nh_c, -1)
+
+        out = jax.lax.map(one_chunk, (dist_cs, u_cs))            # (nc, N, C)
+        return jnp.moveaxis(out, 0, 1).reshape(n, npad)[:, :n]
 
     nh = jax.lax.map(one_layer, (adj, dist, u01))
     idx = jnp.arange(n)
@@ -167,10 +337,21 @@ def _edge_usage_core(nh: jnp.ndarray, reach: jnp.ndarray,
 
 
 def _layer_tables_core(adj: jnp.ndarray, nbr: jnp.ndarray, key: jnp.ndarray,
-                       max_l: int
+                       max_l: int, engine: str = "dense",
+                       nbr_in: Optional[jnp.ndarray] = None
                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    dist = _apsp_core(adj, max_l)
-    nh = _forwarding_core(adj, dist, nbr, key)
+    """APSP + forwarding through either engine.  ``nbr_in`` is the
+    in-neighbor table the frontier APSP relaxes through; ``None`` reuses
+    ``nbr`` — correct whenever ``nbr`` was built from a symmetric
+    superset adjacency (the topology base graph), which is every builder
+    in :mod:`repro.core.layers`."""
+    if engine == "blocked":
+        dist = _apsp_blocked_core(adj, nbr if nbr_in is None else nbr_in,
+                                  max_l)
+        nh = _forwarding_blocked_core(adj, dist, nbr, key)
+    else:
+        dist = _apsp_core(adj, max_l)
+        nh = _forwarding_core(adj, dist, nbr, key)
     reach = dist <= max_l
     return nh, reach, dist
 
@@ -179,41 +360,70 @@ def _layer_tables_core(adj: jnp.ndarray, nbr: jnp.ndarray, key: jnp.ndarray,
 # Jitted batched entry points.
 # -----------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("max_l",))
-def apsp_batched(adj: jnp.ndarray, max_l: int = 64) -> jnp.ndarray:
-    """All-pairs shortest path lengths for an (L, N, N) adjacency stack in
-    one device program; unreachable pairs get ``max_l + 1``."""
+def _apsp_dense_program(adj, max_l):
     return _apsp_core(adj.astype(jnp.bool_), max_l)
 
 
-@jax.jit
-def _forwarding_program(adj, dist, nbr, key):
+@functools.partial(jax.jit, static_argnames=("max_l",))
+def _apsp_blocked_program(adj, nbr_in, max_l):
+    return _apsp_blocked_core(adj.astype(jnp.bool_), nbr_in, max_l)
+
+
+def apsp_batched(adj: jnp.ndarray, max_l: int = 64,
+                 engine: Optional[str] = None) -> jnp.ndarray:
+    """All-pairs shortest path lengths for an (L, N, N) adjacency stack in
+    one device program; unreachable pairs get ``max_l + 1``.  ``engine``
+    overrides the ``REPRO_PATH_ENGINE`` resolution; both engines return
+    bit-identical distances."""
+    if path_engine(adj.shape[-1], engine) == "blocked":
+        adj_np = np.asarray(adj, dtype=bool)
+        nbr_in = jnp.asarray(neighbor_table(adj_np.any(axis=0).T))
+        return _apsp_blocked_program(jnp.asarray(adj_np), nbr_in, max_l)
+    return _apsp_dense_program(jnp.asarray(adj), max_l)
+
+
+@functools.partial(jax.jit, static_argnames=("engine",))
+def _forwarding_program(adj, dist, nbr, key, engine="dense"):
+    if engine == "blocked":
+        return _forwarding_blocked_core(adj.astype(jnp.bool_), dist, nbr, key)
     return _forwarding_core(adj.astype(jnp.bool_), dist, nbr, key)
 
 
 def forwarding_batched(adj: jnp.ndarray, dist: jnp.ndarray,
-                       key: jnp.ndarray) -> jnp.ndarray:
+                       key: jnp.ndarray,
+                       engine: Optional[str] = None) -> jnp.ndarray:
     """Random-tie-break forwarding tables for an (L, N, N) stack; ``key``
     seeds the per-entry uniform choice (one PRNG stream for the stack)."""
     nbr = jnp.asarray(neighbor_table(np.asarray(adj).any(axis=0)))
-    return _forwarding_program(jnp.asarray(adj), jnp.asarray(dist), nbr, key)
+    return _forwarding_program(jnp.asarray(adj), jnp.asarray(dist), nbr, key,
+                               path_engine(adj.shape[-1], engine))
 
 
-@functools.partial(jax.jit, static_argnames=("max_l",))
-def _layer_tables_program(adj, nbr, key, max_l):
-    return _layer_tables_core(adj.astype(jnp.bool_), nbr, key, max_l)
+@functools.partial(jax.jit, static_argnames=("max_l", "engine"))
+def _layer_tables_program(adj, nbr, key, max_l, engine="dense", nbr_in=None):
+    return _layer_tables_core(adj.astype(jnp.bool_), nbr, key, max_l,
+                              engine, nbr_in)
 
 
-def layer_tables_batched(adj: jnp.ndarray, key: jnp.ndarray, max_l: int
+def layer_tables_batched(adj: jnp.ndarray, key: jnp.ndarray, max_l: int,
+                         engine: Optional[str] = None
                          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """APSP + forwarding for a whole layer stack: ONE device program.
 
     Returns ``(nh, reach, dist)`` each (L, N, N).  The host's only job is
     the (N, Dmax) union neighbor table; APSP and every table entry are
-    computed in a single jitted call.
+    computed in a single jitted call.  ``engine`` overrides the
+    ``REPRO_PATH_ENGINE`` resolution; the blocked engine additionally
+    gets the union's in-neighbor table for the frontier relaxation (the
+    stack union need not be symmetric — failure-masked stacks).
     """
     adj_np = np.asarray(adj, dtype=bool)
-    nbr = jnp.asarray(neighbor_table(adj_np.any(axis=0)))
-    return _layer_tables_program(jnp.asarray(adj_np), nbr, key, max_l)
+    union = adj_np.any(axis=0)
+    nbr = jnp.asarray(neighbor_table(union))
+    eng = path_engine(adj_np.shape[-1], engine)
+    nbr_in = jnp.asarray(neighbor_table(union.T)) if eng == "blocked" else None
+    return _layer_tables_program(jnp.asarray(adj_np), nbr, key, max_l,
+                                 eng, nbr_in)
 
 
 @functools.partial(jax.jit, static_argnames=("max_l",))
@@ -265,6 +475,101 @@ def table_validity_batched(nh: jnp.ndarray, alive: jnp.ndarray,
         return jax.lax.fori_loop(0, max_hops, body, eye)
 
     return jax.vmap(one_layer)(nh)
+
+
+# -----------------------------------------------------------------------------
+# Compressed forwarding tables: per-router (dst-block, next-hop set).
+# -----------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class CompressedTables:
+    """Forwarding tables as per-router next-hop *sets* per destination
+    block, instead of a dense (L, N, N) int32 array.
+
+    A shortest-path table row has at most ``Dmax`` distinct next hops
+    (they are neighbors of the router), and consecutive destinations
+    overwhelmingly share them — so each (layer, router, dst-block) keeps
+    the sorted set of next hops appearing in that block
+    (``nh_sets[l, s, b, :]``, -1 padded) and the dense entry shrinks to a
+    uint8 index into it (``sel``).  Reconstruction is exact:
+    ``nh[l, s, t] == nh_sets[l, s, t // block, sel[l, s, t]]`` bitwise,
+    which is what lets :func:`repro.core.transport._prepare` walk paths
+    straight off the compressed form.
+
+    The ratio vs dense is ~``0.25 + K/block`` (uint8 selector plus the
+    set arrays), so larger blocks compress better — but ``K`` (the worst
+    per-block distinct-next-hop count) must fit the uint8 selector, and
+    a very-high-radix router can reach every destination in a block via
+    a distinct next hop (e.g. an FT2 spine).  ``block=None`` (the
+    default) therefore starts at 512 and halves until ``K <= 255``; at
+    sf(q=29) that lands on 512 directly for ~2.8x less memory than the
+    dense stack (36 MB vs 102 MB for 9 layers).
+    """
+
+    nh_sets: np.ndarray   # (L, N, nb, K) int32, -1 padded
+    sel: np.ndarray       # (L, N, N) uint8 index into nh_sets' last axis
+    block: int
+    n: int
+
+    _AUTO_BLOCK = 512
+
+    @classmethod
+    def from_dense(cls, nh: np.ndarray,
+                   block: Optional[int] = None) -> "CompressedTables":
+        nh = np.asarray(nh, dtype=np.int32)
+        L, n, _ = nh.shape
+        auto = block is None
+        block = cls._AUTO_BLOCK if auto else int(block)
+        while True:
+            nb = -(-n // block)
+            npad = nb * block
+            v = np.full((L, n, npad), -1, np.int32)
+            v[:, :, :n] = nh
+            v = v.reshape(L, n, nb, block)
+            order = np.argsort(v, axis=-1, kind="stable")
+            sv = np.take_along_axis(v, order, axis=-1)
+            new = np.ones(sv.shape, dtype=bool)
+            new[..., 1:] = sv[..., 1:] != sv[..., :-1]
+            rank_sorted = np.cumsum(new, axis=-1, dtype=np.int32) - 1
+            k = int(rank_sorted[..., -1].max()) + 1
+            if k <= 255:
+                break
+            if not auto or block <= 2:
+                raise ValueError(
+                    f"next-hop set size {k} exceeds uint8 selector "
+                    f"at block={block}")
+            block //= 2
+        nh_sets = np.full((L, n, nb, k), -1, np.int32)
+        np.put_along_axis(nh_sets, rank_sorted, sv, axis=-1)
+        sel = np.empty(v.shape, np.uint8)
+        np.put_along_axis(sel, order, rank_sorted.astype(np.uint8), axis=-1)
+        sel = sel.reshape(L, n, npad)[:, :, :n]
+        return cls(nh_sets=nh_sets, sel=np.ascontiguousarray(sel),
+                   block=block, n=n)
+
+    def dense(self) -> np.ndarray:
+        """The exact dense (L, N, N) int32 stack this was built from."""
+        L, n = self.sel.shape[0], self.n
+        nb = self.nh_sets.shape[2]
+        t = np.arange(n)
+        out = np.empty((L, n, n), np.int32)
+        for l in range(L):
+            out[l] = self.nh_sets[l, np.arange(n)[:, None], t[None, :]
+                                  // self.block, self.sel[l]]
+        return out
+
+    def lookup(self, layer: np.ndarray, cur: np.ndarray,
+               t: np.ndarray) -> np.ndarray:
+        """Vectorised next-hop lookup ``nh[layer, cur, t]`` off the
+        compressed form (numpy, the host-side walk path)."""
+        layer = np.asarray(layer)
+        cur = np.asarray(cur)
+        t = np.asarray(t)
+        k = self.sel[layer, cur, t]
+        return self.nh_sets[layer, cur, t // self.block, k]
+
+    @property
+    def nbytes(self) -> int:
+        return self.nh_sets.nbytes + self.sel.nbytes
 
 
 @functools.partial(jax.jit, static_argnames=("max_l",))
@@ -322,13 +627,53 @@ def _min_path_stats_jit(adj: jnp.ndarray, max_l: int
     return dist, counts
 
 
-def min_path_stats(adj: np.ndarray, max_l: int = 8) -> Tuple[np.ndarray, np.ndarray]:
+@functools.partial(jax.jit, static_argnames=("max_l",))
+def _min_path_counts_rows_jit(adj: jnp.ndarray, dist: jnp.ndarray,
+                              max_l: int) -> jnp.ndarray:
+    """Row-blocked shortest-walk counts: the power sequence advances per
+    source-row block ((_CHUNK, N) at a time), so the only (N, N) f32
+    arrays alive are the adjacency and the output — the dense variant
+    additionally holds every running power."""
+    n = adj.shape[0]
+    a = adj.astype(jnp.float32)
+    nc = -(-n // _CHUNK)
+    npad = nc * _CHUNK
+    a_rows = jnp.zeros((npad, n), jnp.float32).at[:n].set(a)
+    d_rows = jnp.zeros((npad, n), jnp.int32).at[:n].set(dist)
+    a_rows = a_rows.reshape(nc, _CHUNK, n)
+    d_rows = d_rows.reshape(nc, _CHUNK, n)
+
+    def one_block(args):
+        cur, d_r = args
+        counts = jnp.where(d_r == 1, cur, 0.0)
+        for l in range(2, max_l + 1):
+            cur = semiring_matmul(cur, a, "count")
+            counts = jnp.where(d_r == l, cur, counts)
+        return counts
+
+    out = jax.lax.map(one_block, (a_rows, d_rows))
+    return out.reshape(npad, n)[:n]
+
+
+def min_path_stats(adj: np.ndarray, max_l: int = 8,
+                   engine: Optional[str] = None
+                   ) -> Tuple[np.ndarray, np.ndarray]:
     """Per-pair (l_min, c_min): shortest-path length and multiplicity (§4.2.1).
 
     c_min counts *shortest walks*, which for the minimal length equal
-    shortest paths (no repeated vertex fits in a minimal walk).
+    shortest paths (no repeated vertex fits in a minimal walk).  Under
+    the blocked engine the distances come from the frontier APSP and the
+    counts from row-blocked powers, so peak memory stays O(_CHUNK * N)
+    per intermediate instead of several (N, N) f32 matrices.
     """
-    dist, counts = _min_path_stats_jit(jnp.asarray(adj), max_l)
+    if path_engine(adj.shape[-1], engine) == "blocked":
+        a_np = np.asarray(adj, dtype=bool)
+        nbr_in = jnp.asarray(neighbor_table(a_np.T))
+        dist = _apsp_blocked_program(jnp.asarray(a_np)[None], nbr_in,
+                                     max_l)[0]
+        counts = _min_path_counts_rows_jit(jnp.asarray(a_np), dist, max_l)
+    else:
+        dist, counts = _min_path_stats_jit(jnp.asarray(adj), max_l)
     return np.asarray(dist), np.asarray(counts, dtype=np.float64)
 
 
@@ -393,11 +738,15 @@ def walk_paths(nh: np.ndarray, s: np.ndarray, t: np.ndarray, max_hops: int) -> n
                              s, t, max_hops)
 
 
-def walk_paths_layers(nh_stack: np.ndarray, layer: np.ndarray, s: np.ndarray,
+def walk_paths_layers(nh_stack: Union[np.ndarray, CompressedTables],
+                      layer: np.ndarray, s: np.ndarray,
                       t: np.ndarray, max_hops: int) -> np.ndarray:
     """Walk per-sample forwarding tables: sample i follows layer
     ``layer[i]`` of ``nh_stack``.  One vectorised walk for the whole
-    (sample, layer) batch — no per-sample Python loop.
+    (sample, layer) batch — no per-sample Python loop.  ``nh_stack`` may
+    be the dense (L, N, N) array or a :class:`CompressedTables` (the
+    walk then never touches a dense table; lookups are exact, so the
+    sequences are identical).
 
     Returns (F, max_hops + 1) int32 router sequences (semantics of
     :func:`walk_paths`).
@@ -405,11 +754,15 @@ def walk_paths_layers(nh_stack: np.ndarray, layer: np.ndarray, s: np.ndarray,
     layer = np.asarray(layer, dtype=np.int32)
     s = np.asarray(s, dtype=np.int32)
     t = np.asarray(t, dtype=np.int32)
+    compressed = isinstance(nh_stack, CompressedTables)
     out = np.zeros((len(s), max_hops + 1), dtype=np.int32)
     cur = s.copy()
     out[:, 0] = cur
     for h in range(1, max_hops + 1):
-        nxt = nh_stack[layer, np.maximum(cur, 0), t]
+        if compressed:
+            nxt = nh_stack.lookup(layer, np.maximum(cur, 0), t)
+        else:
+            nxt = nh_stack[layer, np.maximum(cur, 0), t]
         dead = (nxt < 0) | (cur < 0)
         cur = np.where(dead, -1, np.where(cur == t, t, nxt)).astype(np.int32)
         out[:, h] = cur

@@ -32,6 +32,8 @@ __all__ = [
     "xpander",
     "hyperx",
     "fat_tree",
+    "two_layer_fat_tree",
+    "cost_matched_ft2",
     "clique",
     "star",
     "equivalent_jellyfish",
@@ -414,6 +416,48 @@ def fat_tree(k: int, oversubscription: int = 1) -> Topology:
     )
 
 
+def two_layer_fat_tree(leaves: int, spines: int,
+                       concentration: int) -> Topology:
+    """Two-layer (leaf-spine) fat tree, the arXiv:1301.6179 construction.
+
+    Every leaf connects to every spine (one cable each); endpoints attach
+    only to leaves.  Diameter 2, full bisection when ``spines >=
+    concentration``.  Cables per endpoint is ``1 + spines/concentration``,
+    which is what :func:`cost_matched_ft2` tunes to equalise link cost
+    against a target low-diameter topology.  Spines are modelled as
+    logical crossbars (a physical build would decompose a radix-``leaves``
+    spine into a sub-tree; that is invisible at the routing level).
+    """
+    if leaves < 1 or spines < 1 or concentration < 1:
+        raise ValueError("two_layer_fat_tree needs positive L, S, p")
+    nr = leaves + spines
+    adj = np.zeros((nr, nr), dtype=np.bool_)
+    adj[:leaves, leaves:] = True
+    adj |= adj.T
+    conc = np.zeros(nr, dtype=np.int64)
+    conc[:leaves] = concentration
+    return _finish(
+        f"FT2(L={leaves},S={spines},p={concentration})", "ft2", adj, conc, 2,
+        {"leaves": leaves, "spines": spines, "p": concentration},
+    )
+
+
+def cost_matched_ft2(target: Topology) -> Topology:
+    """The two-layer fat tree whose endpoint count and cables-per-endpoint
+    (``edge_density``) match ``target``'s — the paper's cost-equalised
+    baseline pairing (§2.2.3 methodology applied to the 1301.6179 FT2).
+
+    Per-leaf concentration is set to the target's network radix, spines
+    to ``round(p * (density - 1))`` (density = 1 + S/p for an FT2), and
+    the leaf count to whatever reproduces the endpoint total.
+    """
+    p = max(1, target.network_radix)
+    spines = max(1, int(round(p * (target.edge_density - 1.0))))
+    leaves = max(2, int(round(target.n_endpoints / p)))
+    ft2 = two_layer_fat_tree(leaves, spines, p)
+    return dataclasses.replace(ft2, name=f"{target.name}-FT2")
+
+
 # -----------------------------------------------------------------------------
 # Corner cases: clique and star.
 # -----------------------------------------------------------------------------
@@ -453,6 +497,7 @@ TOPOLOGY_FAMILIES = {
     "xp": xpander,
     "hx": hyperx,
     "ft": fat_tree,
+    "ft2": two_layer_fat_tree,
     "clique": clique,
     "star": star,
 }
@@ -460,7 +505,7 @@ TOPOLOGY_FAMILIES = {
 
 def by_name(spec: str, **kw) -> Topology:
     """Build a topology from a compact spec like ``sf:19``, ``df:6``,
-    ``hx:2x16``, ``ft:8``, ``jf:128x12x6``, ``xp:16``."""
+    ``hx:2x16``, ``ft:8``, ``ft2:861x42x43``, ``jf:128x12x6``, ``xp:16``."""
     fam, _, arg = spec.partition(":")
     if fam == "sf":
         return slim_fly(int(arg), **kw)
@@ -471,6 +516,9 @@ def by_name(spec: str, **kw) -> Topology:
         return hyperx(int(L), int(S), **kw)
     if fam == "ft":
         return fat_tree(int(arg), **kw)
+    if fam == "ft2":
+        L, S, p = (int(x) for x in arg.split("x"))
+        return two_layer_fat_tree(L, S, p, **kw)
     if fam == "jf":
         nr, kp, p = (int(x) for x in arg.split("x"))
         return jellyfish(nr, kp, p, **kw)

@@ -187,13 +187,15 @@ def ecmp_routing(topo: Topology, n_tables: int = 8, seed: int = 0,
     if max_len is None:
         max_len = max(6, topo.diameter_nominal + 2)
     t0 = time.perf_counter()
+    engine = paths_mod.path_engine(adj.shape[0])
     nbr = jnp.asarray(paths_mod.neighbor_table(adj))
     stack = jnp.asarray(np.broadcast_to(adj[None], (n_tables,) + adj.shape))
     t_dev = time.perf_counter()
-    dist_j = paths_mod.shortest_path_lengths(jnp.asarray(adj), max_l=max_len)
+    dist_j = paths_mod.apsp_batched(jnp.asarray(adj)[None],
+                                    max_l=max_len)[0]
     nh = paths_mod._forwarding_program(
         stack, jnp.broadcast_to(dist_j[None], stack.shape), nbr,
-        jax.random.PRNGKey(seed))
+        jax.random.PRNGKey(seed), engine)
     nh = np.asarray(jax.block_until_ready(nh)).copy()
     t1 = time.perf_counter()
     dist = np.asarray(dist_j)
@@ -202,6 +204,9 @@ def ecmp_routing(topo: Topology, n_tables: int = 8, seed: int = 0,
     idx = np.arange(adj.shape[0])
     nh[:, idx, idx] = idx
     plen = np.where(reach, dist, 10_000).astype(np.int16)
+    compressed = None
+    if paths_mod.representation_for(adj.shape[0]) == "compressed":
+        compressed = paths_mod.CompressedTables.from_dense(nh)
     t2 = time.perf_counter()
     return LayeredRouting(
         topo=topo, scheme="ecmp", rho=1.0,
@@ -210,6 +215,7 @@ def ecmp_routing(topo: Topology, n_tables: int = 8, seed: int = 0,
         layer_adj=np.stack([adj] * n_tables),
         build_stats={"total_s": t2 - t0, "device_s": t1 - t_dev,
                      "host_s": (t_dev - t0) + (t2 - t1)},
+        compressed=compressed,
     )
 
 
@@ -233,6 +239,33 @@ def _path_edge_tensor(nh, eix, src_r, dst_r, max_hops):
         return es.T, cur == dst_r                      # (F, H), (F,)
 
     return jax.vmap(one_layer)(nh)
+
+
+@functools.partial(jax.jit, static_argnames=("max_hops", "block"))
+def _path_edge_tensor_compressed(nh_sets, sel, eix, src_r, dst_r, max_hops,
+                                 block):
+    """:func:`_path_edge_tensor` off compressed tables: the per-hop
+    next-hop gather becomes selector + set-member lookups
+    (``nh_sets[l, cur, dst_r // block, sel[l, cur, dst_r]]``) and never
+    touches a dense (N, N) table row.  Lookups reconstruct the dense
+    entry exactly, so edges/routed are bit-identical to the dense walk."""
+    dst_blk = dst_r // block
+
+    def one_layer(args):
+        nh_sets_l, sel_l = args
+
+        def hop(cur, _):
+            k = sel_l[cur, dst_r].astype(jnp.int32)
+            nxt = nh_sets_l[cur, dst_blk, k]
+            at_dst = cur == dst_r
+            hole = nxt < 0
+            e = jnp.where(at_dst | hole, -1,
+                          eix[cur, jnp.where(hole, cur, nxt)])
+            return jnp.where(at_dst | hole, cur, nxt), e
+        cur, es = jax.lax.scan(hop, src_r, None, length=max_hops)
+        return es.T, cur == dst_r                      # (F, H), (F,)
+
+    return jax.vmap(one_layer)((nh_sets, sel))
 
 
 def _virtual_links(topo: Topology, wl: FlowWorkload):
@@ -273,9 +306,15 @@ def _prepare(topo: Topology, routing: LayeredRouting, wl: FlowWorkload,
     e_tot = n_edges + 2 * n_ep + 1
     src_r = jnp.asarray(wl.src_router)
     dst_r = jnp.asarray(wl.dst_router)
-    edges, routed = _path_edge_tensor(jnp.asarray(routing.nh),
-                                      jnp.asarray(eix), src_r, dst_r,
-                                      cfg.max_hops)
+    ct = getattr(routing, "compressed", None)
+    if ct is not None:
+        edges, routed = _path_edge_tensor_compressed(
+            jnp.asarray(ct.nh_sets), jnp.asarray(ct.sel), jnp.asarray(eix),
+            src_r, dst_r, cfg.max_hops, ct.block)
+    else:
+        edges, routed = _path_edge_tensor(jnp.asarray(routing.nh),
+                                          jnp.asarray(eix), src_r, dst_r,
+                                          cfg.max_hops)
     # Trim the hop axis to the longest realised path: the per-step cost
     # then tracks actual path lengths, not the cfg.max_hops cap (padding
     # is all -1 beyond the longest path by construction).

@@ -43,8 +43,8 @@ from .registry import Registry
 from .specs import Spec, SpecError, SpecLike
 
 __all__ = ["TOPOLOGIES", "ROUTINGS", "TRAFFIC", "EVALUATORS",
-           "RoutingBundle", "RoutingCtx", "topo_spec", "transport_plan",
-           "transport_meta", "fct_metrics"]
+           "RoutingBundle", "RoutingCtx", "topo_spec", "stack_rep_key",
+           "transport_plan", "transport_meta", "fct_metrics"]
 
 TOPOLOGIES = Registry("topology")
 ROUTINGS = Registry("routing scheme")
@@ -85,6 +85,19 @@ def _ft(k, oversub) -> Topology:
     return topo_mod.fat_tree(k, oversubscription=oversub)
 
 
+@TOPOLOGIES.register("ft2", l=8, s=4, p=4)
+def _ft2(l, s, p) -> Topology:
+    return topo_mod.two_layer_fat_tree(l, s, p)
+
+
+@TOPOLOGIES.register("ft2eq", of="sf(q=5)")
+def _ft2eq(of) -> Topology:
+    """Cost-equalised two-layer fat tree of another registered topology
+    (arXiv 1301.6179 construction; endpoint count and cables-per-endpoint
+    matched — the paper's FT2 baseline pairing)."""
+    return topo_mod.cost_matched_ft2(TOPOLOGIES.build(Spec.coerce(of)))
+
+
 @TOPOLOGIES.register("clique", k=12, p=None)
 def _clique(k, p) -> Topology:
     return topo_mod.clique(k, concentration=p)
@@ -104,7 +117,7 @@ def _jfeq(of, seed) -> Topology:
 
 _COMPACT_KEYS = {"sf": ("q",), "df": ("p",), "ft": ("k",), "xp": ("k",),
                  "clique": ("k",), "star": ("n",), "hx": ("l", "s"),
-                 "jf": ("n", "k", "p")}
+                 "jf": ("n", "k", "p"), "ft2": ("l", "s", "p")}
 
 
 def topo_spec(obj: SpecLike) -> Spec:
@@ -153,17 +166,32 @@ class RoutingCtx:
     stack: Callable[[tuple, Callable[[], LayeredRouting]], LayeredRouting]
 
 
+def stack_rep_key(topo: Topology) -> tuple:
+    """Memo-key suffix for routing artifacts: the resolved path engine and
+    table representation at this topology's size.  ``REPRO_PATH_ENGINE``
+    can change within one process (tests and CI flip it), and a stack
+    built dense must not be served to a caller expecting the compressed
+    representation attached — so every stack cache key carries it.
+    :meth:`repro.experiments.session.Session.fabric` uses the same suffix
+    on its intentionally-colliding keys."""
+    from ..core import paths as paths_mod
+
+    n = topo.n_routers
+    return (paths_mod.path_engine(n), paths_mod.representation_for(n))
+
+
 def _minimal_tables(ctx: RoutingCtx, n: int) -> LayeredRouting:
     # ecmp and letflow differ only in balancing — one shared table stack.
     return ctx.stack(
-        ("tables", ctx.topo_key, int(n), ctx.seed),
+        ("tables", ctx.topo_key, int(n), ctx.seed) + stack_rep_key(ctx.topo),
         lambda: ecmp_routing(ctx.topo, n_tables=int(n), seed=ctx.seed))
 
 
 def _layer_stack(ctx: RoutingCtx, scheme: str, n_layers: int,
                  rho: float) -> LayeredRouting:
     return ctx.stack(
-        ("layers", ctx.topo_key, scheme, int(n_layers), float(rho), ctx.seed),
+        ("layers", ctx.topo_key, scheme, int(n_layers), float(rho), ctx.seed)
+        + stack_rep_key(ctx.topo),
         lambda: build_layers(ctx.topo, int(n_layers), float(rho),
                              scheme=scheme, seed=ctx.seed))
 
@@ -218,7 +246,8 @@ def _failures(ctx: RoutingCtx, of, rate, pattern, mode, down_step,
     key = failures_mod.scenario_key(ctx.seed, int(fseed))
     dead = failures_mod.failure_mask(key, ctx.topo.adj, rate, pattern)
     ckey = ("failed", ctx.topo_key, ROUTINGS.canonical(inner_spec), rate,
-            pattern, mode, down_step, int(fseed), ctx.seed)
+            pattern, mode, down_step, int(fseed), ctx.seed) \
+        + stack_rep_key(ctx.topo)
     if down_step >= 0 and dead.any():
         lr = ctx.stack(ckey, lambda: dataclasses.replace(
             inner.routing, build_stats=None,

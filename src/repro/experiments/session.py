@@ -25,7 +25,8 @@ from ..core.topology import Topology
 from ..core.traffic import FlowWorkload
 from ..core.transport import ecmp_routing
 from .catalog import (EVALUATORS, ROUTINGS, TOPOLOGIES, TRAFFIC,
-                      RoutingBundle, RoutingCtx, table_meta, topo_spec)
+                      RoutingBundle, RoutingCtx, stack_rep_key, table_meta,
+                      topo_spec)
 from .results import RunResult
 from .specs import ExperimentSpec, Spec, SpecLike
 
@@ -113,13 +114,16 @@ class Session:
         tspec = topo_spec(topo)
         t = self.topology(tspec)
         tkey = TOPOLOGIES.canonical(tspec)
+        # Same key tuples as catalog._layer_stack/_minimal_tables (incl.
+        # the stack_rep_key suffix) so fabric cells share the transport
+        # cells' stacks.
         layers = self._stack_memo(
             ("layers", tkey, layer_scheme, int(n_layers), float(rho),
-             int(seed)),
+             int(seed)) + stack_rep_key(t),
             lambda: build_layers(t, int(n_layers), float(rho),
                                  scheme=layer_scheme, seed=int(seed)))
         tables = self._stack_memo(
-            ("tables", tkey, int(n_tables), int(seed)),
+            ("tables", tkey, int(n_tables), int(seed)) + stack_rep_key(t),
             lambda: ecmp_routing(t, n_tables=int(n_tables), seed=int(seed)))
         key = ("fabric", tkey, layer_scheme, int(n_layers), float(rho),
                int(seed), int(n_tables), float(line_rate),

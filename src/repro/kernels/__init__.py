@@ -3,6 +3,10 @@
 * ``semiring``        — batched semiring matmul engine (Appendix B.1):
                         bool OR/AND, saturating f32 counting, (min, +).
                         The whole path/layer pipeline routes through it.
+* ``sparse``          — block-sparse variant of the semiring engine:
+                        per-tile occupancy bitmaps skip empty blocks,
+                        bit-identical to the dense kernel (empty tiles
+                        contribute the additive identity exactly).
 * ``waterfill``       — fused max-min water-filling transport step
                         (§7.1.3): one kernel per simulator step covering
                         the path-edge scatter, fair-share gather, hop-min
@@ -29,6 +33,7 @@ from typing import Optional
 
 __all__ = ["kernel_backend", "interpret_default", "flash_attention",
            "gf_matmul", "pathcount_matmul", "semiring_matmul",
+           "sparse_semiring_matmul", "tile_occupancy",
            "waterfill_step", "ops", "ref"]
 
 _BACKENDS = ("pallas", "ref")
@@ -73,4 +78,5 @@ from .flash_attention import flash_attention  # noqa: F401,E402
 from .gfmm import gf_matmul  # noqa: F401,E402
 from .pathcount import pathcount_matmul  # noqa: F401,E402
 from .semiring import semiring_matmul  # noqa: F401,E402
+from .sparse import sparse_semiring_matmul, tile_occupancy  # noqa: F401,E402
 from .waterfill import waterfill_step  # noqa: F401,E402

@@ -1,0 +1,246 @@
+"""Block-sparse path engine: kernel oracle parity, blocked-vs-dense
+bit-identity across every layer scheme, and the compressed forwarding
+representation (PR 9)."""
+
+import numpy as np
+import pytest
+
+from repro.core import failures as F
+from repro.core import layers as L
+from repro.core import paths as P
+from repro.core import topology as T
+from repro.kernels import sparse_semiring_matmul, tile_occupancy
+from repro.kernels.ref import semiring_matmul_ref
+
+SCHEMES = ["rand", "undir", "pi_min", "spain", "past", "ksp"]
+
+
+def _rand_operands(rng, n, semiring, density=0.25):
+    a = (rng.random((n, n)) < density).astype(np.float32)
+    b = (rng.random((n, n)) < density).astype(np.float32)
+    if semiring == "minplus":
+        a = np.where(a > 0, rng.integers(1, 9, (n, n)), np.inf)
+        b = np.where(b > 0, rng.integers(1, 9, (n, n)), np.inf)
+    return a.astype(np.float32), b.astype(np.float32)
+
+
+# -----------------------------------------------------------------------------
+# Kernel vs oracle.
+# -----------------------------------------------------------------------------
+@pytest.mark.parametrize("semiring", ["count", "bool", "minplus"])
+def test_sparse_kernel_matches_oracle(semiring):
+    rng = np.random.default_rng(3)
+    a, b = _rand_operands(rng, 96, semiring)
+    got = np.asarray(sparse_semiring_matmul(
+        a, b, semiring, bm=32, bn=32, bk=32, interpret=True))
+    want = np.asarray(semiring_matmul_ref(a, b, semiring))
+    if semiring == "bool":
+        want = want > 0.5
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("semiring", ["count", "minplus"])
+def test_sparse_ref_backend_matches_dense(semiring):
+    rng = np.random.default_rng(4)
+    a, b = _rand_operands(rng, 64, semiring)
+    got = np.asarray(sparse_semiring_matmul(a, b, semiring, backend="ref"))
+    np.testing.assert_array_equal(got,
+                                  np.asarray(semiring_matmul_ref(a, b,
+                                                                 semiring)))
+
+
+def test_tile_occupancy_flags_identity_tiles():
+    a = np.zeros((64, 64), np.float32)
+    a[40, 10] = 2.0                         # only tile (1, 0) is live
+    occ = np.asarray(tile_occupancy(a, 32, 32, "count"))
+    np.testing.assert_array_equal(occ, [[0, 0], [1, 0]])
+    m = np.full((64, 64), np.inf, np.float32)
+    m[5, 50] = 1.0                          # minplus identity is +inf
+    occ = np.asarray(tile_occupancy(m, 32, 32, "minplus"))
+    np.testing.assert_array_equal(occ, [[0, 1], [0, 0]])
+
+
+# -----------------------------------------------------------------------------
+# Blocked engine == dense engine, bit for bit.
+# -----------------------------------------------------------------------------
+def test_engine_resolution(monkeypatch):
+    monkeypatch.delenv("REPRO_PATH_ENGINE", raising=False)
+    assert P.path_engine(50) == "dense"
+    assert P.path_engine(P._BLOCKED_MIN_N) == "blocked"
+    assert P.representation_for(50) == "dense"
+    monkeypatch.setenv("REPRO_PATH_ENGINE", "blocked")
+    assert P.path_engine(50) == "blocked"
+    assert P.representation_for(50) == "compressed"
+    monkeypatch.setenv("REPRO_PATH_ENGINE", "bogus")
+    with pytest.raises(ValueError):
+        P.path_engine(50)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_stack_parity_all_schemes(sf5, scheme):
+    lr_d = L.build_layers(sf5, 4, 0.6, scheme=scheme, seed=2,
+                          engine="dense", representation="dense")
+    lr_b = L.build_layers(sf5, 4, 0.6, scheme=scheme, seed=2,
+                          engine="blocked", representation="dense")
+    np.testing.assert_array_equal(lr_d.nh, lr_b.nh)
+    np.testing.assert_array_equal(lr_d.reach, lr_b.reach)
+    np.testing.assert_array_equal(lr_d.pathlen, lr_b.pathlen)
+    np.testing.assert_array_equal(lr_d.layer_adj, lr_b.layer_adj)
+
+
+def test_apsp_parity_asymmetric_stack(sf5):
+    # Oriented (DAG) layers make the stack adjacency asymmetric — the
+    # frontier engine must relax over IN-neighbors, not out-neighbors.
+    lr = L.build_layers(sf5, 5, 0.6, scheme="rand", seed=0)
+    adj = np.asarray(lr.layer_adj, bool)
+    assert not np.array_equal(adj[1], adj[1].T)
+    import jax.numpy as jnp
+    d_dense = np.asarray(P.apsp_batched(jnp.asarray(adj), max_l=16,
+                                        engine="dense"))
+    d_block = np.asarray(P.apsp_batched(jnp.asarray(adj), max_l=16,
+                                        engine="blocked"))
+    np.testing.assert_array_equal(d_dense, d_block)
+
+
+def test_edge_usage_parity(sf5):
+    import jax.numpy as jnp
+    lr_d = L.build_layers(sf5, 3, 0.6, scheme="rand", seed=5, engine="dense")
+    lr_b = L.build_layers(sf5, 3, 0.6, scheme="rand", seed=5,
+                          engine="blocked")
+    u_d = np.asarray(P.edge_usage_batched(jnp.asarray(lr_d.nh),
+                                          jnp.asarray(lr_d.reach), 16))
+    u_b = np.asarray(P.edge_usage_batched(jnp.asarray(lr_b.nh),
+                                          jnp.asarray(lr_b.reach), 16))
+    np.testing.assert_array_equal(u_d, u_b)
+
+
+def test_min_path_stats_parity(sf5):
+    adj = np.asarray(sf5.adj, bool)
+    d0, c0 = P.min_path_stats(adj, max_l=6, engine="dense")
+    d1, c1 = P.min_path_stats(adj, max_l=6, engine="blocked")
+    np.testing.assert_array_equal(d0, d1)
+    np.testing.assert_array_equal(c0, c1)
+
+
+def test_ecmp_parity(sf5, monkeypatch):
+    from repro.core.transport import ecmp_routing
+    monkeypatch.delenv("REPRO_PATH_ENGINE", raising=False)
+    ec_d = ecmp_routing(sf5, n_tables=4, seed=1)
+    monkeypatch.setenv("REPRO_PATH_ENGINE", "blocked")
+    ec_b = ecmp_routing(sf5, n_tables=4, seed=1)
+    np.testing.assert_array_equal(ec_d.nh, ec_b.nh)
+    assert ec_b.compressed is not None
+    np.testing.assert_array_equal(ec_b.compressed.dense(), ec_b.nh)
+
+
+def test_loop_check_reports_identical_after_failures(sf5, monkeypatch):
+    """The loop-freedom repair re-resolves next hops against a
+    failure-masked (asymmetric) adjacency; both engines must produce the
+    same repaired tables and therefore identical LoopCheckReports."""
+    base = L.build_layers(sf5, 4, 0.6, scheme="rand", seed=3)
+    key = F.scenario_key(3, 0)
+    dead = F.failure_mask(key, sf5.adj, 0.1, "bernoulli")
+    monkeypatch.delenv("REPRO_PATH_ENGINE", raising=False)
+    lr_d, rep_d = F.apply_failures(base, dead, mode="repair", seed=3)
+    monkeypatch.setenv("REPRO_PATH_ENGINE", "blocked")
+    lr_b, rep_b = F.apply_failures(base, dead, mode="repair", seed=3)
+    np.testing.assert_array_equal(lr_d.nh, lr_b.nh)
+    assert rep_d == rep_b
+    chk_d = lr_d.validate_loop_free(n_samples=10 ** 9, raise_on_fail=False)
+    chk_b = lr_b.validate_loop_free(n_samples=10 ** 9, raise_on_fail=False)
+    assert chk_d == chk_b
+    assert chk_d.exhaustive
+
+
+# -----------------------------------------------------------------------------
+# Compressed forwarding representation.
+# -----------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_compressed_lookup_matches_dense_gather(seed):
+    topo = T.jellyfish(40 + 8 * seed, 5, 2, seed=seed)
+    lr = L.build_layers(topo, 3, 0.7, scheme="rand", seed=seed,
+                        representation="compressed")
+    assert lr.compressed is not None
+    ct = lr.compressed
+    np.testing.assert_array_equal(ct.dense(), lr.nh)
+    rng = np.random.default_rng(seed)
+    m = 500
+    li = rng.integers(lr.n_layers, size=m)
+    s = rng.integers(topo.n_routers, size=m)
+    t = rng.integers(topo.n_routers, size=m)
+    np.testing.assert_array_equal(ct.lookup(li, s, t), lr.nh[li, s, t])
+    assert ct.nbytes < lr.nh.nbytes
+
+
+def test_compressed_auto_block_high_radix():
+    # An FT2 spine reaches every leaf via a distinct next hop, so a
+    # 512-destination block would need >255 set entries — from_dense
+    # must auto-halve the block until the uint8 selector fits.
+    topo = T.two_layer_fat_tree(300, 4, 2)
+    from repro.core.transport import ecmp_routing
+    ec = ecmp_routing(topo, n_tables=2, seed=0)
+    ct = P.CompressedTables.from_dense(ec.nh)
+    assert ct.block < 512
+    np.testing.assert_array_equal(ct.dense(), ec.nh)
+    with pytest.raises(ValueError):
+        P.CompressedTables.from_dense(ec.nh, block=512)
+
+
+def test_walk_paths_compressed_parity(sf5):
+    lr = L.build_layers(sf5, 4, 0.6, scheme="rand", seed=7,
+                        representation="compressed")
+    rng = np.random.default_rng(7)
+    m = 200
+    li = rng.integers(lr.n_layers, size=m)
+    s = rng.integers(sf5.n_routers, size=m)
+    t = rng.integers(sf5.n_routers, size=m)
+    w_dense = P.walk_paths_layers(lr.nh, li, s, t, 16)
+    w_comp = P.walk_paths_layers(lr.compressed, li, s, t, 16)
+    np.testing.assert_array_equal(w_dense, w_comp)
+
+
+def test_transport_prepare_compressed_parity(sf5):
+    import jax
+
+    from repro.core import traffic, transport
+    lr_d = L.build_layers(sf5, 4, 0.6, scheme="rand", seed=1,
+                          representation="dense")
+    lr_c = L.build_layers(sf5, 4, 0.6, scheme="rand", seed=1,
+                          representation="compressed")
+    wl = traffic.make_workload(sf5, "permutation", seed=3)
+    cfg = transport.SimConfig()
+    arrs_d, stat_d = transport.prepare(sf5, lr_d, wl, cfg)
+    arrs_c, stat_c = transport.prepare(sf5, lr_c, wl, cfg)
+    assert stat_d == stat_c
+    leaves_d = jax.tree_util.tree_leaves(arrs_d)
+    leaves_c = jax.tree_util.tree_leaves(arrs_c)
+    assert len(leaves_d) == len(leaves_c)
+    for x, y in zip(leaves_d, leaves_c):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# -----------------------------------------------------------------------------
+# Cost-equalised two-layer fat tree.
+# -----------------------------------------------------------------------------
+def test_ft2_structure():
+    ft2 = T.two_layer_fat_tree(8, 4, 4)
+    ft2.validate()
+    assert ft2.n_routers == 12 and ft2.n_endpoints == 32
+    assert P.diameter(np.asarray(ft2.adj, bool)) == 2
+    assert ft2.edge_density == pytest.approx(1 + 4 / 4)
+
+
+def test_ft2_cost_match():
+    sf = T.slim_fly(11)
+    ft2 = T.cost_matched_ft2(sf)
+    ft2.validate()
+    assert abs(ft2.edge_density - sf.edge_density) / sf.edge_density < 0.05
+    assert abs(ft2.n_endpoints - sf.n_endpoints) / sf.n_endpoints < 0.05
+
+
+def test_ft2_catalog_registration():
+    from repro.experiments.catalog import TOPOLOGIES, topo_spec
+    t = TOPOLOGIES.build(topo_spec("ft2:8x4x4"))
+    assert t.family == "ft2" and t.n_routers == 12
+    teq = TOPOLOGIES.build(topo_spec("ft2eq(of=sf(q=5))"))
+    assert teq.family == "ft2"
