@@ -8,11 +8,17 @@ Two guarded keys track the two fault paths a robustness sweep pays for:
     re-resolve for the whole stack);
   * ``failures/degraded_step`` — per-step cost of the transport scan
     with the mid-run link-down capacity lane active (one extra int32
-    operand + one capacity select per step vs the pristine scan).
+    operand + one capacity select per step vs the pristine scan);
+  * ``failures/churn_schedule`` — drawing one flapping-fabric renewal
+    schedule (per-link fold_in uniforms + interleaved cumsum) for the
+    whole fabric;
+  * ``failures/churn_step``     — per-step cost of the scan with the
+    churn lanes active (interval capacity select + the conv-gated
+    pickability mask feeding the flowlet re-roll).
 
 Derived columns carry the damage accounting (failed links, dead layers,
-disconnected pairs) so the perf trajectory records WHAT was degraded
-alongside how fast.
+disconnected pairs, churn events) so the perf trajectory records WHAT
+was degraded alongside how fast.
 """
 
 from __future__ import annotations
@@ -63,6 +69,29 @@ def main(quick: bool = False) -> None:
                              median_us=us_d.median_us / n_steps),
          f"steps={n_steps} n_flows={wl.n_flows} "
          f"pristine_us={us_p.min_us / n_steps:.1f} horizon=full")
+
+    # ---- churn schedule draw (CI-guarded): one flapping scenario over
+    # the full fabric ---------------------------------------------------
+    def draw():
+        return F.churn_schedule(key, adj, 0.3, pattern="flap",
+                                mtbf=120.0, mttr=40.0, events=4)
+
+    us_s = timeit(draw, n=3, warmup=1)
+    summ = F.churn_summary(draw())
+    emit("failures/churn_schedule/sf5", us_s,
+         f"links={summ['churn_links']} events={summ['churn_events']} "
+         f"proc=exp")
+
+    # ---- churn lanes (CI-guarded): per-step scan cost with the
+    # interval capacity select + conv pickability gating active ---------
+    churned = dataclasses.replace(lr, link_churn=draw(), churn_conv=8)
+    us_c = timeit(lambda: TP.simulate(topo, churned, wl, cfg),
+                  n=3, warmup=1)
+    emit("failures/churn_step/sf5",
+         dataclasses.replace(us_c, min_us=us_c.min_us / n_steps,
+                             median_us=us_c.median_us / n_steps),
+         f"steps={n_steps} events={summ['churn_events']} conv=8 "
+         f"horizon=full")
 
 
 if __name__ == "__main__":

@@ -50,9 +50,13 @@ Guarded:
                                   time for the whole quick grid (the
                                   scale keystone's contract);
   * ``failures/…``              — bench_failures fault-injection costs:
-                                  scenario mask + stack repair, and the
+                                  scenario mask + stack repair, the
                                   per-step price of the mid-run
-                                  link-down capacity lane;
+                                  link-down capacity lane, the churn
+                                  renewal-schedule draw, and the
+                                  per-step price of the churn lanes
+                                  (interval capacity select + conv-
+                                  gated re-pick mask);
   * ``kernels/sparse/…``        — bench_sparse blocked-engine programs:
                                   frontier APSP and the full blocked
                                   table build (the scale-smoke path);

@@ -43,15 +43,39 @@ this module is the machinery that tests it.  Three pieces:
    capacity is 0, flows on it stall, and the flowlet-gap timer re-picks
    among the surviving usable layers at the next flowlet boundary.
 
+4. **Link churn** (:func:`churn_schedule`) — links that die AND come
+   back: per-link sorted, non-overlapping ``(down, up)`` step intervals
+   in an ``(N, N, K, 2)`` int32 tensor (``INT32_MAX`` rows = never),
+   drawn as seeded renewal processes.  Patterns:
+
+   * ``flap``    — the flapping set is selected by the SAME per-link
+     uniforms as ``bernoulli`` (so it is nested in ``rate`` and a rate-r
+     flap set equals the rate-r bernoulli dead set); each flapping
+     link's alive/repair durations are exponential (or Pareto-II, see
+     ``proc``) renewals with means ``mtbf``/``mttr``, drawn from
+     ``fold_in(key, 2*N*N + link_id)`` — padding/shape independent;
+   * ``rolling`` — sequential maintenance windows over switch groups of
+     ``round(rate * N)`` routers: group g's incident links go down for
+     ``mttr`` steps starting at ``mtbf + g * (mtbf + mttr)``;
+   * ``repair``  — the PR 7 ``bernoulli`` dead set dies at step 1 and
+     returns after a per-link exponential repair time (mean ``mttr``).
+
+   Capacity restores at ``up``; flowlets may RE-PICK a returned link
+   only at ``up + conv_steps`` (control-plane re-convergence, gated in
+   the transport scan via ``LayeredRouting.churn_conv``).
+
 An *empty* mask short-circuits: :func:`apply_failures` returns the input
 stack object unchanged, so ``failures(rate=0)`` cells reproduce the
 pristine cell bit-for-bit (a repair rebuild, even of an unmasked graph,
-could re-draw tie-breaks and change results).
+could re-draw tie-breaks and change results).  An all-sentinel churn
+schedule is likewise dropped by the ``churn(...)`` axis, so
+``churn(rate=0)`` cells are the pristine program, not a gated one.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -61,10 +85,12 @@ import numpy as np
 from . import paths as paths_mod
 from .layers import LayeredRouting, _UNREACH
 
-__all__ = ["PATTERNS", "scenario_key", "link_uniforms", "failure_mask",
-           "apply_failures", "link_down_schedule", "FailureReport"]
+__all__ = ["PATTERNS", "CHURN_PATTERNS", "scenario_key", "link_uniforms",
+           "failure_mask", "apply_failures", "link_down_schedule",
+           "churn_schedule", "churn_summary", "FailureReport"]
 
 PATTERNS = ("bernoulli", "switch", "blast")
+CHURN_PATTERNS = ("flap", "rolling", "repair")
 
 _INT32_MAX = np.iinfo(np.int32).max
 
@@ -270,7 +296,8 @@ def apply_failures(lr: LayeredRouting, dead: np.ndarray,
         compressed = paths_mod.CompressedTables.from_dense(nh)
     degraded = dataclasses.replace(
         lr, nh=nh, reach=reach, pathlen=pathlen, layer_adj=masked_la,
-        build_stats=None, link_down_step=None, compressed=compressed)
+        build_stats=None, link_down_step=None, link_churn=None,
+        compressed=compressed)
     return degraded, report
 
 
@@ -285,3 +312,137 @@ def link_down_schedule(dead: np.ndarray, step: int) -> np.ndarray:
     sym = dead | dead.T
     return np.where(sym, np.int32(step),
                     np.int32(_INT32_MAX)).astype(np.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def _uniforms_by_id_m(key, ids, m):
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(ids)
+    return jax.vmap(lambda k: jax.random.uniform(k, (m,)))(keys)
+
+
+def link_uniforms_m(key, ids, m: int) -> np.ndarray:
+    """``(len(ids), m)`` U(0,1) draws; row ``i`` depends only on
+    ``(key, ids[i])`` and the fixed per-id shape ``m`` — like
+    :func:`link_uniforms`, but m draws per id (renewal sequences)."""
+    ids = np.asarray(ids, dtype=np.uint32)
+    if ids.size == 0:
+        return np.zeros((0, m), dtype=np.float64)
+    return np.asarray(_uniforms_by_id_m(key, jnp.asarray(ids), int(m)),
+                      dtype=np.float64)
+
+
+def _duration_steps(u: np.ndarray, mean: float, proc: str,
+                    shape: float) -> np.ndarray:
+    """Uniforms -> integer durations (>= 1 step) with the given mean:
+    ``proc="exp"`` inverse-CDF exponential, ``proc="pareto"`` a
+    Pareto-II/Lomax with tail index ``shape`` (> 1 so the mean exists) —
+    the heavy-tailed MTBF/MTTR regime of deployment studies."""
+    mean = max(float(mean), 1.0)
+    if proc == "exp":
+        d = -mean * np.log1p(-u)
+    elif proc == "pareto":
+        if shape <= 1.0:
+            raise ValueError(f"pareto churn needs shape > 1, got {shape}")
+        d = mean * (shape - 1.0) * ((1.0 - u) ** (-1.0 / shape) - 1.0)
+    else:
+        raise ValueError(f"unknown churn process {proc!r}; "
+                         f"choose from ('exp', 'pareto')")
+    return np.maximum(1, np.rint(d)).astype(np.int64)
+
+
+def churn_schedule(key, adj: np.ndarray, rate: float,
+                   pattern: str = "flap", mtbf: float = 120.0,
+                   mttr: float = 40.0, events: int = 4,
+                   proc: str = "exp", shape: float = 1.5) -> np.ndarray:
+    """(N, N, K, 2) int32 symmetric per-link ``(down, up)`` churn
+    intervals for one scenario (see module docstring for the patterns).
+
+    Invariants (property-tested):
+
+    * per-link intervals are sorted and non-overlapping:
+      ``1 <= down_0 < up_0 < down_1 < ...`` for real events, with
+      ``(INT32_MAX, INT32_MAX)`` sentinel padding after the last one;
+    * the churned-link set is nested in ``rate`` for ``flap``/``repair``
+      (same selection uniforms as the ``bernoulli`` mask), and a link's
+      event stream is identical at every rate that includes it;
+    * every draw is keyed by ``fold_in(key, 2*N*N + link_id)`` (disjoint
+      from the link/router mask id spaces), so schedules are invariant
+      under padding and under the presence of other links.
+
+    ``down >= 1`` always: step 0's initial layer picks are never gated,
+    so a schedule-free prefix is common to every churn cell.
+    """
+    if pattern not in CHURN_PATTERNS:
+        raise ValueError(f"unknown churn pattern {pattern!r}; "
+                         f"choose from {CHURN_PATTERNS}")
+    a = np.asarray(adj, dtype=bool)
+    n = a.shape[0]
+    iu, ju = _undirected_links(a)
+    rate = float(rate)
+    k_ev = 2 if pattern == "rolling" else (1 if pattern == "repair"
+                                           else max(1, int(events)))
+    sched = np.full((n, n, k_ev, 2), _INT32_MAX, dtype=np.int32)
+    if len(iu) == 0 or rate <= 0.0:
+        return sched
+    lid = iu.astype(np.int64) * n + ju
+    ev_ids = 2 * n * n + lid               # disjoint from mask id spaces
+
+    if pattern == "flap":
+        churning = link_uniforms(key, lid) < rate      # == bernoulli set
+        if not churning.any():
+            return sched
+        cid = ev_ids[churning]
+        u = link_uniforms_m(key, cid, 2 * k_ev)
+        alive = _duration_steps(u[:, 0::2], mtbf, proc, shape)
+        rep = _duration_steps(u[:, 1::2], mttr, proc, shape)
+        # Alternate alive/repair and cumsum: down_k = end of the k-th
+        # alive stretch, up_k = down_k + repair_k.  int64 then clipped —
+        # events pushed past INT32_MAX degenerate to empty sentinels.
+        inter = np.empty((len(cid), 2 * k_ev), dtype=np.int64)
+        inter[:, 0::2] = alive
+        inter[:, 1::2] = rep
+        c = np.minimum(np.cumsum(inter, axis=1), _INT32_MAX)
+        ev = np.stack([c[:, 0::2], c[:, 1::2]], axis=2).astype(np.int32)
+        ev[ev[..., 0] >= _INT32_MAX] = _INT32_MAX
+        sched[iu[churning], ju[churning]] = ev
+    elif pattern == "repair":
+        churning = link_uniforms(key, lid) < rate      # == bernoulli set
+        if not churning.any():
+            return sched
+        u = link_uniforms_m(key, ev_ids[churning], 1)[:, 0]
+        rep = _duration_steps(u, mttr, proc, shape)
+        ev = np.stack([np.ones_like(rep), 1 + rep], axis=1)
+        sched[iu[churning], ju[churning], 0] = \
+            np.minimum(ev, _INT32_MAX).astype(np.int32)
+    else:  # rolling maintenance windows over switch groups
+        gsize = max(1, int(round(rate * n)))
+        group = np.arange(n) // gsize
+        w = max(1, int(round(mttr)))       # window length
+        gap = max(1, int(round(mtbf)))     # quiet time before/between
+        n_groups = int(group.max()) + 1
+        down_g = gap + np.arange(n_groups, dtype=np.int64) * (w + gap)
+        up_g = down_g + w
+        ga, gb = group[iu], group[ju]
+        first, second = np.minimum(ga, gb), np.maximum(ga, gb)
+        ev = np.full((len(iu), k_ev, 2), _INT32_MAX, dtype=np.int64)
+        ev[:, 0, 0] = down_g[first]
+        ev[:, 0, 1] = up_g[first]
+        both = second != first             # endpoint groups differ: 2 events
+        ev[both, 1, 0] = down_g[second][both]
+        ev[both, 1, 1] = up_g[second][both]
+        sched[iu, ju] = np.minimum(ev, _INT32_MAX).astype(np.int32)
+    sched = np.minimum(sched, np.swapaxes(sched, 0, 1))
+    return sched
+
+
+def churn_summary(sched: np.ndarray) -> Dict[str, int]:
+    """Host-side accounting for one churn schedule: churned undirected
+    links, total real events, and the first down step (-1 when the
+    schedule is empty) — JSON-safe, merged into cell meta."""
+    downs = np.asarray(sched)[..., 0]
+    tri = np.triu(np.ones(downs.shape[:2], dtype=bool), 1)
+    ev = (downs < _INT32_MAX) & tri[..., None]
+    n_events = int(ev.sum())
+    first = int(downs[ev].min()) if n_events else -1
+    return {"churn_links": int(ev.any(axis=-1).sum()),
+            "churn_events": n_events, "churn_first_down": first}

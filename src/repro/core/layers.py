@@ -104,6 +104,13 @@ class LayeredRouting:
     # INT32_MAX = never dies); None = pristine fabric.  Set by the
     # fault-injection engine (repro.core.failures.link_down_schedule).
     link_down_step: Optional[np.ndarray] = None
+    # Mid-run churn schedule: per-directed-link sorted (down, up) step
+    # intervals ((N, N, K, 2) int32, INT32_MAX = never; see
+    # repro.core.failures.churn_schedule).  Capacity restores at up;
+    # flowlets may re-pick the link only at up + churn_conv steps
+    # (control-plane re-convergence delay).  None = no churn.
+    link_churn: Optional[np.ndarray] = None
+    churn_conv: int = 0
     # Compressed per-router (dst-block, next-hop set) tables — attached
     # when the stack was built with representation="compressed" (the
     # blocked engine's default).  Exactly reconstructs ``nh``; the

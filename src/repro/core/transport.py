@@ -363,6 +363,22 @@ def _prepare(topo: Topology, routing: LayeredRouting, wl: FlowWorkload,
         lds[np.asarray(eix)[fabric]] = np.asarray(lds_r,
                                                   dtype=np.int32)[fabric]
         out["link_down_step"] = jnp.asarray(lds)       # (e_tot,) int32
+    # Link-churn lane (PR 10): per-virtual-link sorted (down, up) event
+    # intervals plus the re-pick step (up + churn_conv, saturating).
+    # Same trace-time contract as link_down_step: the keys are ABSENT
+    # for schedule-free fabrics, so those compile the pre-churn program.
+    lc_r = getattr(routing, "link_churn", None)
+    if lc_r is not None:
+        imax = np.iinfo(np.int32).max
+        lc_r = np.asarray(lc_r, dtype=np.int32)
+        lc = np.full((e_tot,) + lc_r.shape[2:], imax, dtype=np.int32)
+        fabric = np.asarray(eix) >= 0
+        lc[np.asarray(eix)[fabric]] = lc_r[fabric]
+        conv = int(getattr(routing, "churn_conv", 0) or 0)
+        pick_at = np.minimum(lc[..., 1].astype(np.int64) + conv, imax)
+        out["link_churn"] = jnp.asarray(lc)            # (e_tot, K, 2)
+        out["churn_pick_at"] = jnp.asarray(            # (e_tot, K)
+            pick_at.astype(np.int32))
     return out
 
 
@@ -435,6 +451,21 @@ def _escape_layers(layer, esc_ok):
     return jnp.where(valid, esc, layer).astype(jnp.int32), valid
 
 
+def _churn_state(i, sched, pick_at):
+    """Per-link churn predicates at step ``i``: ``dead`` — inside a
+    ``(down, up)`` outage interval (capacity 0); ``unpickable`` — inside
+    the wider ``(down, up + conv)`` window during which flowlets may not
+    (re-)pick the link.  Capacity restores at ``up``, USABILITY at
+    ``up + conv`` — the control-plane re-convergence delay.  ``sched``
+    is ``(..., K, 2)`` int32 with INT32_MAX sentinels, ``pick_at`` the
+    precomputed saturating ``up + conv`` (``(..., K)``).  Pure — the
+    scan body and the unit tests share this exact function."""
+    down = sched[..., 0]
+    dead = jnp.any((down <= i) & (i < sched[..., 1]), axis=-1)
+    unpickable = jnp.any((down <= i) & (i < pick_at), axis=-1)
+    return dead, unpickable
+
+
 def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
     e_tot, n_layers, n_steps = static
     f = arrs["size"].shape[0]
@@ -451,6 +482,11 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
     recovery_on = str(cfg.recovery).lower() in ("on", "1", "true")
     record_on = bool(int(cfg.record))
     has_lds = "link_down_step" in arrs
+    # Churn lanes (PR 10), gated exactly like link_down_step: absent
+    # operands compile the identical pre-churn program.  has_death arms
+    # the loss-accounting lanes for EITHER kind of mid-run link death.
+    has_churn = "link_churn" in arrs
+    has_death = has_lds or has_churn
     # Link-load ECN marking replaces the pure share-vs-rate congested
     # bool as the dctcp signal only under recovery (tcp keeps the
     # legacy signal in both modes).
@@ -569,6 +605,13 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
             cap_t = jnp.where(i < arrs["link_down_step"], cap, 0.0)
         else:
             cap_t = cap
+        # Link churn: capacity 0 inside every (down, up) outage window —
+        # and back to line rate at `up` (unlike the one-shot lane, links
+        # RETURN).  Re-pick usability is gated separately below.
+        if has_churn:
+            churn_dead, link_unpick = _churn_state(
+                i, arrs["link_churn"], arrs["churn_pick_at"])
+            cap_t = jnp.where(churn_dead, 0.0, cap_t)
         wf = waterfill_step(edges, w, desired, cap_t, active=send,
                             fair_iters=cfg.fair_iters,
                             backend=cfg.kernel_backend or None,
@@ -585,10 +628,20 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
         # remaining — those bytes MUST be retransmitted.  The dying
         # link's capacity is already 0 this step, so the hit flow
         # delivered nothing concurrently.
-        if recovery_on and has_lds:
-            lds_g = arrs["link_down_step"][
-                jnp.where(edges >= 0, edges, e_tot - 1)]         # (F, S)
-            hit = active & routed & jnp.any(lds_g == i, axis=1)
+        if recovery_on and has_death:
+            safe_e = jnp.where(edges >= 0, edges, e_tot - 1)     # (F, S)
+            died_now = None
+            if has_lds:
+                lds_g = arrs["link_down_step"][safe_e]
+                died_now = jnp.any(lds_g == i, axis=1)
+            if has_churn:
+                # A churn down-event on the current path this step: the
+                # same in-flight loss as a one-shot death (events repeat,
+                # so a flapping link charges the pipe on EVERY down).
+                ch_d = arrs["link_churn"][..., 0][safe_e]        # (F, S, K)
+                c_hit = jnp.any(ch_d == i, axis=(1, 2))
+                died_now = c_hit if died_now is None else died_now | c_hit
+            hit = active & routed & died_now
             pipe_steps = (n_hops * jnp.float32(cfg.link_latency)
                           + jnp.float32(cfg.sw_latency)) / jnp.float32(cfg.dt)
             lost = jnp.where(
@@ -600,7 +653,7 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
 
         delivered = sent * line_bytes
         new_remaining = jnp.maximum(state["remaining"] - delivered * w, 0.0)
-        if recovery_on and has_lds:
+        if recovery_on and has_death:
             new_remaining = new_remaining + lost * line_bytes
         newly_done = (new_remaining <= 0) & ~done & started
         # FCT is NOT accumulated in-scan: it is derived on the host from
@@ -651,7 +704,7 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
             expire = stalled & (stall_new >= state["rto"])
             backoff = expire
             blocked = state["blocked_until"]
-            if has_lds:
+            if has_death:
                 i32 = i.astype(jnp.int32)
                 if cfg.transport == "ndp":
                     # Trimming: loss detected in one trimmed-RTT, no
@@ -673,7 +726,7 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
             rto = _rto_next(state["rto"], progress, backoff,
                             int(cfg.rto_base), int(cfg.rto_cap))
             stall_out = jnp.where(expire, 0, stall_new)
-            retrans = state["retrans_acc"] + (lost if has_lds else 0.0)
+            retrans = state["retrans_acc"] + (lost if has_death else 0.0)
 
         # --- flowlet elasticity + layer re-roll -----------------------------
         if reroute:
@@ -681,7 +734,22 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
             p_gap = jnp.clip(cfg.dt / cfg.flowlet_gap
                              * (slack + cfg.gap_eps), 0.0, 1.0)
             roll = u[:, 0] < p_gap
-            newpick = _pick_layers(u[:, 1], arrs["usable"], minimal_only)
+            if has_churn:
+                # Re-convergence gating: a layer whose path crosses a
+                # link inside its (down, up + conv) window is not
+                # re-pickable this step — flows already placed on it
+                # keep sending once capacity returns at `up`, but new
+                # flowlet picks wait out the control-plane delay.  With
+                # every candidate gated the flow keeps its layer (no
+                # forced fallback onto a dead layer 0).
+                pe_safe = jnp.where(arrs["path_edges"] >= 0,
+                                    arrs["path_edges"], e_tot - 1)
+                layer_live = ~jnp.any(link_unpick[pe_safe], axis=2).T  # (F, L)
+                cand = arrs["usable"] & layer_live
+                newpick = _pick_layers(u[:, 1], cand, minimal_only)
+                roll = roll & cand.any(axis=1)
+            else:
+                newpick = _pick_layers(u[:, 1], arrs["usable"], minimal_only)
             layer = jnp.where(roll & active, newpick, state["layer"])
         else:
             layer = state["layer"]
@@ -693,7 +761,8 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
             # hazard's (key, flow, step) stream is untouched).  Without
             # re-routing (ecmp) the layer stays pinned: the
             # never-recovers control.
-            esc_layer, esc_valid = _escape_layers(state["layer"], esc_ok)
+            esc_layer, esc_valid = _escape_layers(
+                state["layer"], esc_ok & layer_live if has_churn else esc_ok)
             layer = jnp.where(expire & esc_valid, esc_layer, layer)
 
         out = dict(remaining=new_remaining, layer=layer, rate=rate,
@@ -701,7 +770,7 @@ def _run_scan_impl(arrs, key0, cfg: SimConfig, static: Tuple[int, int, int]):
         if recovery_on:
             out.update(
                 sent_acc=state["sent_acc"] + sent
-                - (lost if has_lds else 0.0),
+                - (lost if has_death else 0.0),
                 stall=stall_out, rto=rto, blocked_until=blocked,
                 retrans_acc=retrans)
         else:
@@ -914,6 +983,17 @@ def pad_prepared(arrs, static, *, n_flows: int, n_edges: int,
         out["link_down_step"] = jnp.pad(
             arrs["link_down_step"], (0, n_edges - e_tot),
             constant_values=np.iinfo(np.int32).max)
+    if "link_churn" in arrs:
+        # Churn events pad the same way: sentinel intervals never open,
+        # so padded link slots are never dead nor pick-gated.  The event
+        # axis K is a bucket key (padded_signature), never padded.
+        imax = np.iinfo(np.int32).max
+        out["link_churn"] = jnp.pad(
+            arrs["link_churn"], ((0, n_edges - e_tot), (0, 0), (0, 0)),
+            constant_values=imax)
+        out["churn_pick_at"] = jnp.pad(
+            arrs["churn_pick_at"], ((0, n_edges - e_tot), (0, 0)),
+            constant_values=imax)
     return out, (int(n_edges), n_layers, n_steps)
 
 

@@ -264,6 +264,54 @@ def _failures(ctx: RoutingCtx, of, rate, pattern, mode, down_step,
     return RoutingBundle(lr, inner.balancing, failure_meta=report.as_meta())
 
 
+@ROUTINGS.register("churn", of="fatpaths", rate=0.1, pattern="flap",
+                   mtbf=120.0, mttr=40.0, conv=8, events=4, proc="exp",
+                   shape=1.5, fseed=0)
+def _churn(ctx: RoutingCtx, of, rate, pattern, mtbf, mttr, conv, events,
+           proc, shape, fseed) -> RoutingBundle:
+    """Link-churn wrapper: build ``of``'s stack, then attach a seeded
+    renewal schedule of per-link (down, up) outage intervals (``pattern``
+    = flap | rolling | repair; ``mtbf``/``mttr`` mean steps between /
+    to repair, ``proc`` = exp | pareto, ``events`` down/up cycles per
+    flapping link).  Capacity restores at ``up``; flowlets may re-pick a
+    returned link only ``conv`` steps later (control-plane
+    re-convergence).  The schedule key depends on the cell seed and
+    ``fseed`` but NOT the scheme, so schemes are compared under
+    identical churn; an empty realized schedule (e.g. rate=0) reproduces
+    the schedule-free cell bit-for-bit.  Composes with ``failures(...)``
+    in either order (static damage + churn on the survivors)."""
+    from ..core import failures as failures_mod
+
+    inner_spec = Spec.coerce(of)
+    if inner_spec.name == "churn":
+        raise SpecError("churn(of=...) cannot nest another churn spec")
+    fn, kw = ROUTINGS.resolve(inner_spec)
+    inner = fn(ctx, **kw)
+    rate = float(rate)
+    key = failures_mod.scenario_key(ctx.seed, int(fseed))
+    sched = failures_mod.churn_schedule(
+        key, ctx.topo.adj, rate, pattern=str(pattern), mtbf=float(mtbf),
+        mttr=float(mttr), events=int(events), proc=str(proc),
+        shape=float(shape))
+    summ = failures_mod.churn_summary(sched)
+    if summ["churn_events"] == 0:
+        # Empty schedule: the inner bundle ITSELF — churn(rate=0) cells
+        # compile the schedule-free program, bit-for-bit.
+        return inner
+    ckey = ("churn", ctx.topo_key, ROUTINGS.canonical(inner_spec), rate,
+            str(pattern), float(mtbf), float(mttr), int(conv), int(events),
+            str(proc), float(shape), int(fseed), ctx.seed) \
+        + stack_rep_key(ctx.topo)
+    lr = ctx.stack(ckey, lambda: dataclasses.replace(
+        inner.routing, build_stats=None, link_churn=sched,
+        churn_conv=int(conv)))
+    fm = dict(getattr(inner, "failure_meta", None) or {})
+    fm.update(churn_pattern=str(pattern), churn_rate=rate,
+              churn_mtbf=float(mtbf), churn_mttr=float(mttr),
+              churn_conv=int(conv), **summ)
+    return RoutingBundle(lr, inner.balancing, failure_meta=fm)
+
+
 # -----------------------------------------------------------------------------
 # Traffic patterns.
 # -----------------------------------------------------------------------------
@@ -604,6 +652,45 @@ def _outcast(session, cell, steps, transport, seeds, dt, flowlet_gap,
     return metrics, transport_meta(cell, cfg, sim_seeds)
 
 
+def _trailing_mean(x: np.ndarray, window: int) -> np.ndarray:
+    """Trailing ``window``-step moving mean with growing head windows
+    (the first k < window entries average what exists).  ONE shared
+    implementation for every plateau/band computation — the recovery,
+    availability, and degradation evaluators must smooth identically or
+    their thresholds drift apart."""
+    x = np.asarray(x, np.float64)
+    csum = np.concatenate([[0.0], np.cumsum(x)])
+    n = np.arange(1, len(x) + 1)
+    lo = np.maximum(0, n - window)
+    return (csum[n] - csum[lo]) / (n - lo)
+
+
+def _curve_points_meta(n: int, curve_points: int) -> np.ndarray:
+    """Downsampled step indices for trajectory meta (shared by the
+    recovery and availability evaluators)."""
+    return np.unique(np.linspace(0, max(0, n - 1),
+                                 min(int(curve_points), max(1, n)))
+                     .round().astype(int))
+
+
+def _run_alternate(session, cell, rspec, steps, transport, seeds, dt,
+                   flowlet_gap, adaptive=1, chunk=64, **plan_kw):
+    """Run THIS cell's workload under an alternate routing spec — the
+    scenario runner shared by the degradation and availability
+    evaluators (baseline / rate-ladder / pristine-control runs).
+    Returns ``(sims, bundle, cfg, sim_seeds)``; the alternate bundle is
+    memoized in the session like any other routing artifact."""
+    import types
+
+    bundle = session.routing(cell.spec.topo, rspec, seed=cell.seed)
+    shim = types.SimpleNamespace(bundle=bundle, seed=cell.seed)
+    cfg, sim_seeds = transport_plan(shim, steps, transport, seeds, dt,
+                                    flowlet_gap, adaptive, chunk, **plan_kw)
+    sims = simulate_seeds(cell.topo, bundle.routing, cell.workload,
+                          cfg, sim_seeds)
+    return sims, bundle, cfg, sim_seeds
+
+
 @EVALUATORS.register("degradation", rates="0.05:0.15:0.3",
                      patterns="bernoulli:switch", mode="repair", steps=400,
                      transport="ndp", seeds=1, dt=10e-6, flowlet_gap=50e-6,
@@ -620,20 +707,15 @@ def _degradation(session, cell, rates, patterns, mode, steps, transport,
     dead-link/disconnected-pair counts are monotone in rate by
     construction, and the throughput curve degrades monotonically up to
     simulation noise."""
-    import types
-
     rate_list = sorted({float(r) for r in str(rates).split(":") if r})
     pattern_list = [p for p in str(patterns).split(":") if p]
     if not rate_list or not pattern_list:
         raise SpecError("degradation needs non-empty rates and patterns")
 
     def run_scenario(fspec: Spec):
-        bundle = session.routing(cell.spec.topo, fspec, seed=cell.seed)
-        shim = types.SimpleNamespace(bundle=bundle, seed=cell.seed)
-        cfg, sim_seeds = transport_plan(shim, steps, transport, seeds, dt,
-                                        flowlet_gap, adaptive, chunk)
-        sims = simulate_seeds(cell.topo, bundle.routing, cell.workload,
-                              cfg, sim_seeds)
+        sims, bundle, _, _ = _run_alternate(
+            session, cell, fspec, steps, transport, seeds, dt,
+            flowlet_gap, adaptive, chunk)
         return _fct_metrics(sims), bundle.failure_meta
 
     of = cell.spec.routing.format()
@@ -711,6 +793,10 @@ def _recovery(session, cell, steps, transport, seeds, dt, flowlet_gap,
     eps = float(eps)
     fm = getattr(cell.bundle, "failure_meta", None) or {}
     down = int(fm.get("link_down_step", -1))
+    if down < 0:
+        # No one-shot death: fall back to the first churn down-event, so
+        # recovery-from-first-outage is measurable on churn cells too.
+        down = int(fm.get("churn_first_down", -1))
     if down < 1 or down >= n:
         plateau = float(g[-window:].mean()) if n else float("nan")
         ttr, recovered, dip = 0.0, 1.0, 0.0
@@ -719,9 +805,7 @@ def _recovery(session, cell, steps, transport, seeds, dt, flowlet_gap,
         post = g[down:]
         # Trailing moving mean over the POST-fault segment only (early
         # windows are short) — pre-fault steps must not inflate it.
-        csum = np.concatenate([[0.0], np.cumsum(post)])
-        lo = np.maximum(0, np.arange(1, len(post) + 1) - window)
-        sm = (csum[1:] - csum[lo]) / (np.arange(1, len(post) + 1) - lo)
+        sm = _trailing_mean(post, window)
         target = (1.0 - eps) * plateau
         hits = np.nonzero(sm >= target)[0]
         recovered = 1.0 if hits.size else 0.0
@@ -732,15 +816,95 @@ def _recovery(session, cell, steps, transport, seeds, dt, flowlet_gap,
         _fct_metrics(sims), ttr_steps=ttr, recovered=recovered,
         dip_frac=dip, plateau_goodput=plateau,
         stalled_peak=float(st[down:].max() if 0 <= down < n else st.max()))
-    idx = np.unique(np.linspace(0, max(0, n - 1),
-                                min(int(curve_points), max(1, n)))
-                    .round().astype(int))
+    idx = _curve_points_meta(n, curve_points)
     meta = dict(transport_meta(cell, cfg, sim_seeds),
                 recovery_eps=eps, recovery_window=window,
                 rto_base=int(rto_base), rto_cap=int(rto_cap),
                 curve_steps=[int(i) for i in idx],
                 goodput_curve=[float(g[i]) for i in idx],
                 stalled_curve=[float(st[i]) for i in idx])
+    return metrics, meta
+
+
+@EVALUATORS.register("availability", slo=0.8, steps=400, transport="ndp",
+                     seeds=1, dt=10e-6, flowlet_gap=50e-6, chunk=64,
+                     recovery="on", rto_base=16, rto_cap=256,
+                     ecn_thresh=0.65, window=16, curve_points=64)
+def _availability(session, cell, slo, steps, transport, seeds, dt,
+                  flowlet_gap, chunk, recovery, rto_base, rto_cap,
+                  ecn_thresh, window, curve_points
+                  ) -> Tuple[Dict[str, float], Dict[str, Any]]:
+    """Availability-SLO compliance under link churn: run the cell (full
+    horizon, per-step record lane on, recovery lanes armed by default)
+    and score every post-churn step against the PRISTINE plateau — the
+    tail trailing-mean goodput of a control run of the same cell with
+    its ``churn(...)`` wrapper stripped, same workload and seeds.
+
+    A step complies when the trailing ``window``-step mean goodput is
+    >= ``slo`` x plateau.  Reported metrics: ``availability`` (compliant
+    fraction of steps from the first churn down-event), ``violations``
+    (number of entries into violation), ``max_outage_steps`` (longest
+    violating stretch), ``plateau_goodput`` — plus the standard FCT
+    metrics.  Cells without a churn schedule are trivially available
+    (1.0).  Meant for saturating workloads (e.g. a huge permutation)
+    where pristine goodput holds a plateau; the acceptance pairing is
+    ``churn(of=fatpaths...)`` vs the layer-pinned ``churn(of=ecmp...)``
+    control on the same flapping fabric."""
+    cfg, sim_seeds = transport_plan(
+        cell, steps, transport, seeds, dt, flowlet_gap, adaptive=0,
+        chunk=chunk, recovery=str(recovery), rto_base=rto_base,
+        rto_cap=rto_cap, ecn_thresh=ecn_thresh, record=1)
+    sims = simulate_seeds(cell.topo, cell.bundle.routing, cell.workload,
+                          cfg, sim_seeds)
+    g = np.mean([np.asarray(r.goodput_steps, np.float64) for r in sims],
+                axis=0)
+    n = len(g)
+    window = max(1, int(window))
+    slo = float(slo)
+
+    # Pristine control: the same cell with the churn wrapper stripped
+    # (shared scenario runner; no-churn cells are their own control).
+    rspec = cell.spec.routing
+    if rspec.name == "churn":
+        _, rkw = ROUTINGS.resolve(rspec)
+        pristine_spec = Spec.coerce(rkw["of"])
+    else:
+        pristine_spec = rspec
+    sims0, _, _, _ = _run_alternate(
+        session, cell, pristine_spec, steps, transport, seeds, dt,
+        flowlet_gap, adaptive=0, chunk=chunk, recovery=str(recovery),
+        rto_base=rto_base, rto_cap=rto_cap, ecn_thresh=ecn_thresh,
+        record=1)
+    g0 = np.mean([np.asarray(r.goodput_steps, np.float64) for r in sims0],
+                 axis=0)
+    plateau = float(_trailing_mean(g0, window)[-1]) if len(g0) \
+        else float("nan")
+
+    fm = getattr(cell.bundle, "failure_meta", None) or {}
+    down = int(fm.get("churn_first_down", -1))
+    if down < 1 or down >= n or not plateau > 0:
+        availability, violations, max_outage = 1.0, 0.0, 0.0
+    else:
+        sm = _trailing_mean(g[down:], window)
+        ok = sm >= slo * plateau
+        availability = float(ok.mean())
+        bad = np.concatenate([[0], (~ok).astype(np.int64), [0]])
+        d = np.diff(bad)
+        starts = np.nonzero(d == 1)[0]
+        ends = np.nonzero(d == -1)[0]
+        violations = float(len(starts))
+        max_outage = float((ends - starts).max()) if len(starts) else 0.0
+    metrics = dict(
+        _fct_metrics(sims), availability=availability,
+        violations=violations, max_outage_steps=max_outage,
+        plateau_goodput=plateau)
+    idx = _curve_points_meta(n, curve_points)
+    meta = dict(transport_meta(cell, cfg, sim_seeds),
+                availability_slo=slo, availability_window=window,
+                pristine_routing=pristine_spec.format(),
+                curve_steps=[int(i) for i in idx],
+                goodput_curve=[float(g[i]) for i in idx],
+                pristine_curve=[float(g0[i]) for i in idx])
     return metrics, meta
 
 

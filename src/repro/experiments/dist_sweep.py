@@ -119,7 +119,7 @@ def bucket_signature(cfg, static) -> tuple:
 
 
 def padded_signature(cfg, n_layers: int, n_flows: int, e_tot: int,
-                     link_down: bool = False) -> tuple:
+                     link_down: bool = False, churn_k: int = 0) -> tuple:
     """The bucketing key actually used to group cells: the compatibility
     key plus the power-of-two size class of the flow count and the
     virtual-link count.  Cells in one bucket batch into one program and
@@ -130,9 +130,14 @@ def padded_signature(cfg, n_layers: int, n_flows: int, e_tot: int,
     scan operands needed.  ``link_down`` flags cells with a mid-run
     link-death schedule: their prepared operand tree carries one extra
     leaf (and the scan compiles an extra capacity select), so they must
-    not stack with pristine cells."""
+    not stack with pristine cells.  ``churn_k`` is the churn schedule's
+    per-link event-slot count (0 = no schedule): churn cells carry two
+    extra (e, K, ...) operands and extra scan lanes, so they never share
+    a bucket with pristine cells, and K is an exact stacking dimension —
+    not a pow2 class — because event slots are never padded."""
     return (dataclasses.replace(cfg, seed=0), n_layers,
-            _ceil_pow2(n_flows), _ceil_pow2(e_tot), bool(link_down))
+            _ceil_pow2(n_flows), _ceil_pow2(e_tot), bool(link_down),
+            int(churn_k))
 
 
 # The compiled bucket programs live at module scope: a fresh
@@ -387,9 +392,11 @@ def dist_sweep(session: Session, cells: List[ExperimentSpec], *,
     for w in batched:
         has_lds = getattr(w.cell.bundle.routing, "link_down_step",
                           None) is not None
+        lc = getattr(w.cell.bundle.routing, "link_churn", None)
         buckets.setdefault(
             padded_signature(w.cfg, w.n_layers, w.n_flows, w.e_tot,
-                             link_down=has_lds),
+                             link_down=has_lds,
+                             churn_k=0 if lc is None else int(lc.shape[2])),
             []).append(w)
 
     # Dispatch ahead of finalize: jax dispatch is async, so small

@@ -1,0 +1,322 @@
+"""PR 10 link-churn engine: schedule invariants (sorted, disjoint,
+nested in rate, padding-independent), the rate-0 / schedule-free
+bit-for-bit contract against the PR 9 golden cells, `_churn_state`
+capacity-vs-pickability semantics, re-convergence gating, engine
+identity for churn cells across 8 devices, and the availability-SLO
+acceptance pairing (FatPaths beats a layer-pinned scheme on the same
+flapping fabric)."""
+
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip; the rest still run
+    from _hypothesis_stub import given, settings, st  # noqa: F401
+
+import jax.numpy as jnp
+
+import repro.core.topology as topo_mod
+from repro.core import failures as F
+from repro.core import transport as TP
+from repro.experiments.session import Session
+
+from test_recovery import GOLDEN
+
+IMAX = np.iinfo(np.int32).max
+
+
+@pytest.fixture(scope="module")
+def session():
+    return Session()
+
+
+@pytest.fixture(scope="module")
+def sf5(session):
+    return session.topology("sf(q=5)")
+
+
+def _real_events(sched):
+    """(link, k, (down, up)) triples for real (non-sentinel) events on
+    the upper triangle."""
+    s = np.asarray(sched)
+    tri = np.triu(np.ones(s.shape[:2], dtype=bool), 1)
+    out = {}
+    for i, j in zip(*np.nonzero(tri)):
+        ev = s[i, j][s[i, j, :, 0] < IMAX]
+        if len(ev):
+            out[(int(i), int(j))] = ev
+    return out
+
+
+# ---- schedule invariants ----------------------------------------------------
+@pytest.mark.parametrize("pattern", F.CHURN_PATTERNS)
+def test_churn_schedule_sorted_disjoint_symmetric(sf5, pattern):
+    adj = np.asarray(sf5.adj, bool)
+    key = F.scenario_key(0)
+    a = F.churn_schedule(key, adj, 0.4, pattern=pattern, mtbf=30.0,
+                        mttr=10.0, events=4)
+    b = F.churn_schedule(key, adj, 0.4, pattern=pattern, mtbf=30.0,
+                        mttr=10.0, events=4)
+    assert (a == b).all()                           # deterministic
+    assert (a == np.swapaxes(a, 0, 1)).all()        # symmetric
+    assert not (np.any(a[..., 0] < IMAX, axis=-1) & ~adj).any()
+    evs = _real_events(a)
+    assert evs                                      # something churns
+    for ev in evs.values():
+        flat = ev.reshape(-1).astype(np.int64)
+        assert ev[0, 0] >= 1                        # never gates step 0
+        assert (np.diff(flat) > 0).all()            # 1<=d0<u0<d1<u1<...
+
+
+def test_churn_flap_set_matches_bernoulli_and_is_nested(sf5):
+    """flap/repair select churning links with the SAME uniforms as the
+    bernoulli failure mask: the churned set at a lower rate is a subset
+    of any higher rate, and a link's event stream is identical at every
+    rate that includes it."""
+    adj = np.asarray(sf5.adj, bool)
+    key = F.scenario_key(3)
+    for pattern in ("flap", "repair"):
+        prev = {}
+        for rate in (0.0, 0.05, 0.2, 0.5, 1.0):
+            sched = F.churn_schedule(key, adj, rate, pattern=pattern,
+                                     mtbf=40.0, mttr=15.0, events=3)
+            evs = _real_events(sched)
+            churned = np.any(sched[..., 0] < IMAX, axis=-1)
+            dead = np.asarray(F.failure_mask(key, adj, rate, "bernoulli"))
+            assert (churned == dead).all(), (pattern, rate)
+            assert set(prev) <= set(evs), (pattern, rate)
+            for lk, ev in prev.items():             # streams rate-invariant
+                np.testing.assert_array_equal(evs[lk], ev)
+            prev = evs
+
+
+def test_churn_schedule_is_per_link_independent(sf5):
+    """Masking every OTHER link out of the adjacency leaves a link's
+    event stream untouched — draws are keyed by canonical link id, so
+    schedules are invariant under padding and the presence of other
+    links."""
+    adj = np.asarray(sf5.adj, bool)
+    key = F.scenario_key(0)
+    full = _real_events(F.churn_schedule(key, adj, 0.6, mtbf=25.0,
+                                         mttr=10.0, events=3))
+    (i, j), want = sorted(full.items())[0]
+    only = np.zeros_like(adj)
+    only[i, j] = only[j, i] = True
+    alone = _real_events(F.churn_schedule(key, only, 0.6, mtbf=25.0,
+                                          mttr=10.0, events=3))
+    np.testing.assert_array_equal(alone[(i, j)], want)
+
+
+def test_churn_rate_zero_and_empty_adj():
+    adj = np.asarray(topo_mod.clique(4).adj, bool)
+    key = F.scenario_key(0)
+    z = F.churn_schedule(key, adj, 0.0)
+    assert (z == IMAX).all()
+    assert F.churn_summary(z) == {"churn_links": 0, "churn_events": 0,
+                                  "churn_first_down": -1}
+    e = F.churn_schedule(key, np.zeros((4, 4), bool), 0.9)
+    assert (e == IMAX).all()
+
+
+def test_churn_rolling_covers_every_group_once(sf5):
+    """Rolling maintenance: windows are sequential and disjoint in time,
+    and every link carries the windows of its (<= 2) endpoint groups."""
+    adj = np.asarray(sf5.adj, bool)
+    n = adj.shape[0]
+    sched = F.churn_schedule(F.scenario_key(0), adj, 0.25,
+                             pattern="rolling", mtbf=20.0, mttr=8.0)
+    gsize = max(1, int(round(0.25 * n)))
+    group = np.arange(n) // gsize
+    for (i, j), ev in _real_events(sched).items():
+        want = sorted({int(group[i]), int(group[j])})
+        downs = [20 + g * 28 for g in want]         # gap + g*(w+gap)
+        np.testing.assert_array_equal(ev[:, 0], downs)
+        np.testing.assert_array_equal(ev[:, 1], [d + 8 for d in downs])
+
+
+def test_churn_summary_counts(sf5):
+    adj = np.asarray(sf5.adj, bool)
+    sched = F.churn_schedule(F.scenario_key(0), adj, 0.4, mtbf=30.0,
+                             mttr=10.0, events=4)
+    evs = _real_events(sched)
+    summ = F.churn_summary(sched)
+    assert summ["churn_links"] == len(evs)
+    assert summ["churn_events"] == sum(len(e) for e in evs.values())
+    assert summ["churn_first_down"] == min(
+        int(e[0, 0]) for e in evs.values())
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(0, 31),
+       st.floats(0.05, 1.0), st.floats(0.05, 1.0),
+       st.sampled_from(["exp", "pareto"]))
+def test_churn_schedule_properties(seed, fseed, r_lo, r_hi, proc):
+    """Random scenario keys / rates: events sorted and non-overlapping,
+    down >= 1, symmetric, lower-rate event set nested in higher-rate
+    with identical per-link streams."""
+    adj = np.asarray(topo_mod.clique(7).adj, bool)
+    key = F.scenario_key(seed, fseed)
+    lo, hi = sorted((r_lo, r_hi))
+    kw = dict(pattern="flap", mtbf=33.0, mttr=9.0, events=3, proc=proc)
+    s_lo = F.churn_schedule(key, adj, lo, **kw)
+    s_hi = F.churn_schedule(key, adj, hi, **kw)
+    for s in (s_lo, s_hi):
+        assert (s == np.swapaxes(s, 0, 1)).all()
+        for ev in _real_events(s).values():
+            flat = ev.reshape(-1).astype(np.int64)
+            assert ev[0, 0] >= 1
+            assert (np.diff(flat) > 0).all()
+    lo_ev, hi_ev = _real_events(s_lo), _real_events(s_hi)
+    assert set(lo_ev) <= set(hi_ev)
+    for lk, ev in lo_ev.items():
+        np.testing.assert_array_equal(hi_ev[lk], ev)
+
+
+# ---- capacity vs pickability: the conv window -------------------------------
+def test_churn_state_capacity_at_up_pickable_at_up_plus_conv():
+    """An outage (down=5, up=10) with conv=3: capacity is zero on
+    [5, 10), the link is unpickable on [5, 13) — flowlets may re-pick it
+    only after the re-convergence delay."""
+    sched = jnp.asarray([[[5, 10]], [[IMAX, IMAX]]], jnp.int32)
+    pick = jnp.asarray([[13], [IMAX]], jnp.int32)
+    want = {4: (False, False), 5: (True, True), 9: (True, True),
+            10: (False, True), 12: (False, True), 13: (False, False)}
+    for i, (dead, unpick) in want.items():
+        d, u = TP._churn_state(jnp.int32(i), sched, pick)
+        assert bool(d[0]) == dead and bool(u[0]) == unpick, i
+        assert not bool(d[1]) and not bool(u[1])    # sentinel never fires
+
+
+def test_churn_state_multi_event_and_zero_conv():
+    sched = jnp.asarray([[[5, 10], [20, 25]]], jnp.int32)
+    pick = sched[..., 1]                            # conv=0: pick == up
+    for i, dead in [(5, True), (10, False), (19, False), (20, True),
+                    (24, True), (25, False)]:
+        d, u = TP._churn_state(jnp.int32(i), sched, pick)
+        assert bool(d[0]) == dead and bool(u[0]) == dead, i
+
+
+# ---- churn off reproduces the PR 9 golden cells bit-for-bit -----------------
+@pytest.mark.parametrize("routing,evaluator", sorted(GOLDEN))
+def test_churn_rate_zero_reproduces_golden_bitwise(session, routing,
+                                                   evaluator):
+    """`churn(rate=0)` realizes an empty schedule and must return the
+    inner bundle itself — metrics equal the golden cells with ==, per
+    transport mode, and no recovery-lane keys appear."""
+    rr = session.run("clique(k=6)", f"churn(of={routing},rate=0)",
+                     "uniform", evaluator, seed=0)
+    want = GOLDEN[(routing, evaluator)]
+    assert set(rr.metrics) == set(want)
+    for k, v in want.items():
+        assert rr.metrics[k] == v, (k, rr.metrics[k], v)
+
+
+def test_churn_axis_rejects_nesting(session):
+    with pytest.raises(Exception, match="nest"):
+        session.run("clique(k=4)", "churn(of=churn(of=ecmp),rate=0.1)",
+                    "uniform", "transport(steps=4)", seed=0)
+
+
+def test_churn_cell_runs_and_reports_meta(session):
+    rr = session.run(
+        "clique(k=6)",
+        "churn(of=fatpaths(n_layers=3),rate=0.4,mtbf=30,mttr=10,conv=4)",
+        "uniform", "transport(steps=60,recovery=on)", seed=0)
+    fm = rr.meta
+    assert fm["churn_pattern"] == "flap" and fm["churn_rate"] == 0.4
+    assert fm["churn_conv"] == 4 and fm["churn_links"] > 0
+    assert fm["churn_events"] > 0 and fm["churn_first_down"] >= 1
+    assert rr.metrics["retrans_mb"] >= 0
+    # the outages actually bite vs the pristine cell
+    base = session.run("clique(k=6)", "fatpaths(n_layers=3)", "uniform",
+                       "transport(steps=60,recovery=on)", seed=0)
+    assert rr.metrics["tput_gbs"] < base.metrics["tput_gbs"]
+
+
+# ---- availability-SLO acceptance --------------------------------------------
+_CHURN = ("churn(of={},rate=0.4,mtbf=100,mttr=80,conv=8)")
+_HALFPERM = "permutation(flow_size=1000000000.0,frac=0.5)"
+_AVAIL = "availability(steps=400,slo=0.8)"
+
+
+def test_availability_fatpaths_beats_pinned_ecmp(session):
+    """The PR's headline: under a flapping fabric at half-load, FatPaths
+    with the recovery lanes armed re-routes around each outage and
+    sustains strictly higher availability(slo=0.8) than the layer-pinned
+    ecmp control, whose flows stay dark for every outage + nothing else
+    runs in their place."""
+    fp = session.run("clique(k=6)", _CHURN.format("fatpaths(n_layers=9)"),
+                     _HALFPERM, _AVAIL, seed=0)
+    ec = session.run("clique(k=6)", _CHURN.format("ecmp(n=4)"),
+                     _HALFPERM, _AVAIL, seed=0)
+    assert 0 < fp.metrics["availability"] < 1
+    assert fp.metrics["availability"] > ec.metrics["availability"]
+    for rr in (fp, ec):
+        assert rr.metrics["plateau_goodput"] > 0
+        assert rr.metrics["violations"] >= 1
+        assert rr.metrics["max_outage_steps"] > 0
+        assert rr.meta["availability_slo"] == 0.8
+        assert (len(rr.meta["curve_steps"]) == len(rr.meta["goodput_curve"])
+                == len(rr.meta["pristine_curve"]))
+    assert fp.meta["pristine_routing"] == "fatpaths(n_layers=9)"
+    assert ec.meta["pristine_routing"] == "ecmp(n=4)"
+
+
+def test_availability_without_churn_is_trivial(session):
+    rr = session.run("clique(k=6)", "fatpaths(n_layers=3)", _HALFPERM,
+                     "availability(steps=120)", seed=0)
+    assert rr.metrics["availability"] == 1.0
+    assert rr.metrics["violations"] == 0.0
+    assert rr.meta["pristine_routing"] == "fatpaths(n_layers=3)"
+
+
+def test_recovery_reads_first_churn_down(session):
+    """recovery(...) without a one-shot link_down_step falls back to the
+    first churn down-event as the fault time."""
+    rr = session.run(
+        "clique(k=6)",
+        "churn(of=fatpaths(n_layers=9),rate=0.4,mtbf=60,mttr=20,conv=4)",
+        _HALFPERM, "recovery(steps=200)", seed=0)
+    assert rr.metrics["dip_frac"] > 0               # the outages bit
+    assert rr.metrics["plateau_goodput"] > 0
+
+
+# ---- engine identity: churn grid, sequential vs 8 devices -------------------
+_PROG = textwrap.dedent("""
+    from repro.experiments import Session, compare_results
+    from repro.experiments.dist_sweep import dist_sweep
+    import jax
+    assert jax.device_count() == 8, jax.device_count()
+    grid = dict(
+        topos=["clique(k=6)"],
+        routings=[
+            "churn(of=fatpaths(n_layers=3),rate=0.4,mtbf=30,mttr=10,conv=4)",
+            "churn(of=ecmp(n=4),pattern=rolling,rate=0.34,mtbf=20,mttr=8,conv=4)",
+            "fatpaths(n_layers=3)"],
+        patterns=["uniform"],
+        evaluators=["transport(steps=80,recovery=on)",
+                    "transport(steps=80)"],
+        seeds=[0, 1])
+    seq = Session().sweep(**grid)
+    s8 = Session()
+    d8 = dist_sweep(s8, s8.grid(**grid), devices=8)
+    diffs = compare_results(seq, d8)
+    assert diffs == [], diffs[:5]
+    ch = [r for r in d8 if r.routing.startswith("churn")]
+    assert len(ch) == 8
+    assert all(r.meta["churn_events"] > 0 for r in ch)
+    print("CHURN8_OK")
+""")
+
+
+def test_churn_grid_8_devices_identical():
+    r = subprocess.run(
+        [sys.executable, "-c", _PROG],
+        capture_output=True, text=True, timeout=600,
+        env={"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+             "PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert "CHURN8_OK" in r.stdout, r.stderr[-2000:]
